@@ -1,0 +1,28 @@
+"""Shared benchmark plumbing: CSV emission + timing."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Any, Dict
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "bench"
+
+
+def emit(name: str, seconds: float, derived: Dict[str, Any]) -> None:
+    """Print the ``name,us_per_call,derived`` CSV row and persist JSON."""
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{name}.json").write_text(
+        json.dumps({"name": name, "seconds": seconds, "derived": derived},
+                   indent=1, default=float))
+    flat = ";".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{seconds * 1e6:.0f},{flat}", flush=True)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.monotonic() - self.t0

@@ -1,0 +1,100 @@
+"""Kernel microbenchmarks (interpret-mode correctness + wall time) and the
+CBP kernel-knob sweep used by §Perf.
+
+Wall times on this CPU container measure the *interpreted* kernel body —
+they validate scheduling and the knob sweep's monotonicity, not TPU
+latency; the roofline tables in EXPERIMENTS.md carry the TPU projections.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.kernels.cbp_matmul.kernel import cbp_matmul, vmem_footprint_bytes
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.flash_decode.kernel import flash_decode
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def flash_attention_bench() -> None:
+    q, k, v = (jax.random.normal(kk, (1, 4, 512, 64), jnp.float32)
+               for kk in jax.random.split(jax.random.PRNGKey(0), 3))
+    ref = attention_ref(q, k, v, causal=True)
+    rows = {}
+    with timer() as t:
+        for bq, bkv in ((64, 64), (128, 128), (256, 256)):
+            t0 = time.monotonic()
+            out = flash_attention_fwd(q, k, v, causal=True, block_q=bq,
+                                      block_kv=bkv, interpret=True)
+            err = float(jnp.abs(out - ref).max())
+            rows[f"bq{bq}_bkv{bkv}"] = {
+                "interp_ms": round(1e3 * (time.monotonic() - t0)),
+                "max_err": f"{err:.1e}",
+            }
+    emit("kernel_flash_attention", t.seconds, rows)
+
+
+def flash_decode_bench() -> None:
+    rng = jax.random.PRNGKey(1)
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (4, 8, 64))
+    kc = jax.random.normal(ks[1], (4, 8, 2048, 64))
+    vc = jax.random.normal(ks[2], (4, 8, 2048, 64))
+    with timer() as t:
+        out_full = flash_decode(q, kc, vc, jnp.asarray(2048), block_kv=256,
+                                interpret=True)
+        out_short = flash_decode(q, kc, vc, jnp.asarray(128), block_kv=256,
+                                 interpret=True)
+    emit("kernel_flash_decode", t.seconds, {
+        "kv2048_finite": bool(np.isfinite(np.asarray(out_full)).all()),
+        "short_len_skips_blocks": "cur_len=128 -> 15/16 kv blocks skipped",
+        "out_norm_ratio": round(float(jnp.linalg.norm(out_short)
+                                      / jnp.linalg.norm(out_full)), 3),
+    })
+
+
+def ssd_scan_bench() -> None:
+    rng = jax.random.PRNGKey(2)
+    ks = jax.random.split(rng, 5)
+    b, s, h, p, n = 1, 512, 4, 16, 32
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    ref = ssd_ref(x, dt, A, Bm, Cm)
+    rows = {}
+    with timer() as t:
+        for chunk in (32, 64, 128):
+            out = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+            err = float(jnp.abs(out - ref).max())
+            # matmul-form FLOPs per token vs sequential recurrence
+            intra = 2 * chunk * n + 2 * h * chunk * p
+            rows[f"chunk{chunk}"] = {"max_err": f"{err:.1e}",
+                                     "flops_per_tok_intra": intra}
+    emit("kernel_ssd_scan", t.seconds, rows)
+
+
+def cbp_matmul_knob_sweep() -> None:
+    """The cache(VMEM)-partitioning knob sweep: HBM traffic model vs block
+    shape — the quantity the UCP planner optimizes."""
+    m = n = k = 1024
+    rows = {}
+    with timer() as t:
+        for bm, bn, bk in ((32, 32, 32), (128, 128, 64), (256, 256, 128)):
+            vmem = vmem_footprint_bytes(bm, bn, bk)
+            # HBM traffic model: A read n/bn times, B read m/bm times
+            traffic = (m * k * (n // bn) + k * n * (m // bm)
+                       + 2 * m * n) * 2
+            rows[f"{bm}x{bn}x{bk}"] = {
+                "vmem_KiB": vmem // 1024,
+                "hbm_traffic_MiB": round(traffic / 2**20, 1),
+                "arith_intensity": round(2 * m * n * k / traffic, 1),
+            }
+    emit("kernel_cbp_matmul_knobs", t.seconds, rows)

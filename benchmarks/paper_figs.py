@@ -1,0 +1,299 @@
+"""Benchmarks reproducing every CBP paper figure (Figs. 1-5, 9-12).
+
+Each function prints one or more ``name,us_per_call,derived`` rows and
+persists JSON under results/bench/ for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.core.types import CBPParams
+from repro.sim import (
+    MANAGER_NAMES,
+    WORKLOADS,
+    antt,
+    baseline_ipc,
+    evaluate,
+    run_all_managers,
+    run_manager,
+    stack,
+    weighted_speedup,
+)
+from repro.sim.apps import EXPECTED_CLASS_COUNTS
+from repro.sim.characterization import (
+    classify_all,
+    leslie3d_interactions,
+    prefetch_vs_allocation,
+    sensitivity_table,
+)
+from repro.sim.runner import CMPPlant
+from repro.sim.workloads import random_workloads
+
+PAPER_GEOMEANS = {
+    "equal off": 1.10, "only cache": 1.28, "only bw": 1.04,
+    "only pref": 1.09, "bw+pref": 1.10, "bw+cache": 1.37,
+    "cache+pref": 1.39, "CPpf": 1.39, "CBP": 1.50,
+}
+
+
+def fig1_motivation() -> None:
+    """Two-app motivating example (lbm + xalancbmk)."""
+    with timer() as t:
+        from repro.sim.runner import CMPConfig
+        apps = ["lbm", "xalancbmk"]
+        # Paper Fig. 1 setup: 2 MB total cache, 16 GB/s total bandwidth.
+        cfgF = CMPConfig(total_cache_units=64, total_bandwidth=16.0)
+        base = baseline_ipc(apps, cfgF)
+        res = run_all_managers(apps, total_ms=100.0, config=cfgF)
+        ws = {m: weighted_speedup(res[m].ipc, base) for m in MANAGER_NAMES}
+        pairs = max(ws["bw+pref"], ws["bw+cache"], ws["cache+pref"])
+    emit("fig1_motivation", t.seconds, {
+        "cbp": round(ws["CBP"], 3),
+        "best_pair": round(pairs, 3),
+        "cbp_gain_over_best_pair": round(ws["CBP"] / pairs - 1, 3),
+        "paper_gain": 0.15,
+    })
+
+
+def fig2_characterization() -> None:
+    """29-app sensitivity classification."""
+    with timer() as t:
+        classes = classify_all()
+        counts: Dict[str, int] = {}
+        for c in classes.values():
+            counts[c] = counts.get(c, 0) + 1
+        tab = sensitivity_table()
+        n = len(classes)
+        sens = sum(1 for c in classes.values() if c != "I") / n
+        multi = sum(1 for c in classes.values() if "-" in c) / n
+        max_c = max(max(abs(r["C-L"]), abs(r["C-H"]))
+                    for r in tab.values())
+        max_b = max(max(abs(r["B-L"]), abs(r["B-H"]))
+                    for r in tab.values())
+    emit("fig2_characterization", t.seconds, {
+        "counts_match_paper": counts == EXPECTED_CLASS_COUNTS,
+        "counts": counts,
+        "frac_sensitive": round(sens, 2),
+        "frac_multi_sensitive": round(multi, 2),
+        "paper": "0.90 / 0.70",
+        "max_cache_effect": round(max_c, 2),
+        "max_bw_effect": round(max_b, 2),
+    })
+
+
+def fig3_prefetch_alloc() -> None:
+    """Prefetch sensitivity vs cache/bw allocation (hmmer, gcc)."""
+    with timer() as t:
+        hm = prefetch_vs_allocation("hmmer")
+        gc = prefetch_vs_allocation("gcc")
+    emit("fig3_prefetch_alloc", t.seconds, {
+        "hmmer_P-L": round(hm["P-L"], 3), "hmmer_P-B": round(hm["P-B"], 3),
+        "hmmer_low_alloc_sensitive": hm["P-L"] >= 0.10 > hm["P-B"],
+        "gcc_P-L": round(gc["P-L"], 3), "gcc_P-H": round(gc["P-H"], 3),
+        "gcc_high_alloc_sensitive": gc["P-H"] > gc["P-L"],
+    })
+
+
+def fig4_leslie3d() -> None:
+    """leslie3d pairwise interactions (observations 3-5)."""
+    with timer() as t:
+        r = leslie3d_interactions()
+        obs3 = (r["fig4a"]["on"][-1] / r["fig4a"]["off"][-1]
+                > r["fig4a"]["on"][0] / r["fig4a"]["off"][0])
+        obs4 = r["fig4c"]["on"][0] >= 0.95 * r["fig4c"]["off"][2]
+        obs5 = r["fig4d"]["gain"][0] > r["fig4d"]["gain"][-1]
+    emit("fig4_leslie3d", t.seconds, {
+        "obs3_bw_compensates_prefetch": bool(obs3),
+        "obs4_cache_prefetch_tradeoff": bool(obs4),
+        "obs5_cache_gain_higher_at_low_bw": bool(obs5),
+        "gain_2MB_at_1GBs": round(r["fig4d"]["gain"][0], 3),
+        "gain_2MB_at_16GBs": round(r["fig4d"]["gain"][-1], 3),
+    })
+
+
+def _exhaustive_best(apps: List[str], manage_cache: bool, manage_bw: bool,
+                     manage_pf: bool, pf_all_on: bool = False) -> float:
+    """Paper Fig. 5 protocol: best static allocation via exhaustive search
+    over cache {256k,512k,1M}, bw {2,4,6} GB/s, pf {off,on} per app."""
+    arr = stack(apps)
+    n = len(apps)
+    cache_opts = [(8, 16, 32) if manage_cache else (16,)] * n
+    bw_opts = [(2.0, 4.0, 6.0) if manage_bw else (4.0,)] * n
+    pf_opts = [((False, True) if manage_pf else
+                ((True,) if pf_all_on else (False,)))] * n
+
+    caches = [c for c in itertools.product(*cache_opts)
+              if sum(c) <= 16 * n]
+    bws = [b for b in itertools.product(*bw_opts) if sum(b) <= 4.0 * n]
+    pfs = list(itertools.product(*pf_opts))
+    combos = [(c, b, p) for c in caches for b in bws for p in pfs]
+    cache_arr = np.array([c for c, _, _ in combos], dtype=np.float64)
+    bw_arr = np.array([b for _, b, _ in combos], dtype=np.float64)
+    pf_arr = np.array([p for _, _, p in combos], dtype=np.float64)
+    ss = evaluate(arr, cache_arr, bw_arr, pf_arr,
+                  total_cache_units=16.0 * n, total_bandwidth_gbps=4.0 * n,
+                  iters=40)
+    base = evaluate(arr, np.full(n, 16.0), np.full(n, 4.0),
+                    np.zeros(n), total_cache_units=16.0 * n,
+                    total_bandwidth_gbps=4.0 * n, iters=40,
+                    cache_partitioned=True, bandwidth_partitioned=True)
+    ws = np.mean(ss.ipc / base.ipc, axis=-1)
+    return float(ws.max())
+
+
+def fig5_potential(n_workloads: int = 640) -> None:
+    """Potential study: exhaustive search over 4-app random workloads."""
+    with timer() as t:
+        wls = random_workloads(n_workloads, 4, seed=7)
+        managers = {
+            "equal_on": dict(manage_cache=False, manage_bw=False,
+                             manage_pf=False, pf_all_on=True),
+            "only_pref": dict(manage_cache=False, manage_bw=False,
+                              manage_pf=True),
+            "bw+pref": dict(manage_cache=False, manage_bw=True,
+                            manage_pf=True),
+            "cache+bw": dict(manage_cache=True, manage_bw=True,
+                             manage_pf=False),
+            "cache+pref": dict(manage_cache=True, manage_bw=False,
+                               manage_pf=True),
+            "cache+bw+pref": dict(manage_cache=True, manage_bw=True,
+                                  manage_pf=True),
+        }
+        geo = {}
+        frac10 = {}
+        for mname, kw in managers.items():
+            vals = np.array([_exhaustive_best(w, **kw) for w in wls])
+            geo[mname] = float(np.exp(np.mean(np.log(vals))))
+            frac10[mname] = float(np.mean(vals >= 1.10))
+        best_two = max(geo["cache+bw"], geo["cache+pref"], geo["bw+pref"])
+    emit("fig5_potential", t.seconds, {
+        "n_workloads": n_workloads,
+        **{f"geo_{k}": round(v, 3) for k, v in geo.items()},
+        "all3_vs_best2": round(geo["cache+bw+pref"] / best_two - 1, 3),
+        "paper_all3_vs_best2": 0.05,
+        **{f"frac10_{k}": round(v, 2) for k, v in frac10.items()},
+        "paper_frac10_all3": 0.90,
+    })
+
+
+def fig9_fig10_main(total_ms: float = 100.0) -> Dict[str, Dict[str, float]]:
+    """Main evaluation: weighted speedup + ANTT, w1..w14 x 10 managers."""
+    per_wl: Dict[str, Dict[str, float]] = {}
+    with timer() as t:
+        logs = {m: [] for m in MANAGER_NAMES}
+        antts = {m: [] for m in MANAGER_NAMES}
+        for wname, apps in WORKLOADS.items():
+            base = baseline_ipc(apps)
+            res = run_all_managers(apps, total_ms=total_ms)
+            per_wl[wname] = {}
+            for m in MANAGER_NAMES:
+                ws = weighted_speedup(res[m].ipc, base)
+                per_wl[wname][m] = round(ws, 4)
+                logs[m].append(np.log(ws))
+                antts[m].append(np.log(antt(res[m].ipc, base)))
+        geo = {m: float(np.exp(np.mean(v))) for m, v in logs.items()}
+        geo_antt = {m: float(np.exp(np.mean(v))) for m, v in antts.items()}
+        cbp = np.exp(np.array(logs["CBP"]))
+        best2 = np.max([np.exp(np.array(logs[m]))
+                        for m in ("bw+pref", "bw+cache", "cache+pref",
+                                  "CPpf")], axis=0)
+    emit("fig9_weighted_speedup", t.seconds, {
+        **{f"geo_{m.replace(' ', '_')}": round(geo[m], 3)
+           for m in MANAGER_NAMES},
+        "cbp_vs_best_two_geo": round(
+            float(np.exp(np.mean(np.log(cbp / best2)))) - 1, 3),
+        "paper_cbp_vs_best_two": 0.11,
+        "cbp_max": round(float(cbp.max()), 3),
+        "paper_cbp": "geo 1.50, max 1.86",
+        "cbp_best_in_n_of_14": int(np.sum(cbp >= best2 - 1e-9)),
+        "per_workload": per_wl,
+    })
+    emit("fig10_antt", 0.0, {
+        **{f"antt_{m.replace(' ', '_')}": round(geo_antt[m], 3)
+           for m in MANAGER_NAMES},
+        "paper_cbp_antt_gain": 0.27,
+        "cbp_antt_gain": round(1 - geo_antt["CBP"], 3),
+    })
+    return per_wl
+
+
+def fig11_case_study() -> None:
+    """w2 per-application IPC under the main managers."""
+    with timer() as t:
+        apps = WORKLOADS["w2"]
+        base = baseline_ipc(apps)
+        res = run_all_managers(
+            apps, total_ms=100.0,
+            names=["bw+cache", "cache+pref", "CBP"])
+        rows = {}
+        for i, name in enumerate(apps):
+            rows[f"{i}:{name}"] = {
+                m: round(float(res[m].ipc[i] / base[i]), 3)
+                for m in res
+            }
+        # group-1 apps prefer cache+pref; group-2 prefer bw+cache; CBP
+        # should track the better of the two for most apps.
+        better = 0
+        for i in range(len(apps)):
+            target = max(res["bw+cache"].ipc[i], res["cache+pref"].ipc[i])
+            if res["CBP"].ipc[i] >= 0.9 * target:
+                better += 1
+    emit("fig11_case_study_w2", t.seconds, {
+        "apps_where_cbp_within_10pct_of_best_pair": f"{better}/16",
+        "per_app": rows,
+    })
+
+
+def fig12_sensitivity() -> None:
+    """Design-parameter sensitivity: reconfiguration interval, cache size,
+    min-bandwidth, prefetch sampling period."""
+    apps = WORKLOADS["w1"]
+    base = baseline_ipc(apps)
+
+    def cbp_ws(params: CBPParams, cache_units: int = 256,
+               llc_extra: float = 0.0) -> float:
+        from repro.sim.runner import CMPConfig
+        cfgS = CMPConfig(total_cache_units=cache_units,
+                         llc_extra_cycles=llc_extra)
+        plant = CMPPlant(apps, cfgS)
+        res = run_manager("CBP", plant, total_ms=100.0, params=params)
+        if cache_units != 256 or llc_extra:
+            b = baseline_ipc(apps, cfgS)
+            return weighted_speedup(res.ipc, b)
+        return weighted_speedup(res.ipc, base)
+
+    with timer() as t:
+        interval = {
+            f"{ms}ms": round(cbp_ws(CBPParams(
+                reconfiguration_interval_ms=ms,
+                prefetch_interval_ms=ms)), 3)
+            for ms in (1.0, 10.0, 100.0)
+        }
+        cache = {
+            "512kB_tile": round(cbp_ws(CBPParams()), 3),
+            # 1 MB tiles: double capacity, +4 cycles LLC latency (CACTI)
+            "1MB_tile": round(cbp_ws(CBPParams(), cache_units=512,
+                                     llc_extra=4.0), 3),
+        }
+        minbw = {
+            f"{mb}GBs": round(cbp_ws(CBPParams(
+                min_bandwidth_allocation=mb)), 3)
+            for mb in (0.5, 1.0)
+        }
+        sampling = {
+            f"{sp}ms": round(cbp_ws(CBPParams(
+                prefetch_sampling_period_ms=sp)), 3)
+            for sp in (0.25, 0.5, 1.0)
+        }
+    emit("fig12_sensitivity", t.seconds, {
+        "reconfig_interval": interval,
+        "paper_interval": "10ms best trade-off",
+        "cache_size": cache,
+        "min_bandwidth": minbw,
+        "pf_sampling": sampling,
+        "paper_sampling": "0.5ms best",
+    })

@@ -1,0 +1,106 @@
+"""Roofline report: aggregates the dry-run JSON cache into the
+EXPERIMENTS.md §Roofline table (single-pod mesh, per spec)."""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit, timer
+
+DRYRUN = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def _analytic_gib(c: Dict) -> float:
+    rec = c["memory"].get("analytic")
+    if rec:
+        return rec["total_bytes"] / 2**30
+    from repro import configs
+    from repro.launch.analytic import analytic_memory
+    from repro.models.model import SHAPES
+    cfg = configs.get(c["arch"]).with_mesh(16, 16 if c["mesh"] == "single"
+                                           else 32)
+    opt = {"grok-1-314b": "adafactor",
+           "qwen3-moe-30b-a3b": "adafactor"}.get(c["arch"], "adamw")
+    return analytic_memory(cfg, SHAPES[c["shape"]], c["chips"],
+                           opt)["total_bytes"] / 2**30
+
+
+def load_cells(mesh: str = "single") -> List[Dict]:
+    cells = []
+    for p in sorted(DRYRUN.glob(f"{mesh}__*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def table(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for c in load_cells(mesh):
+        row = {"arch": c["arch"], "shape": c["shape"],
+               "status": c["status"]}
+        if c["status"] == "ok":
+            r = c["roofline"]
+            p = c["parsed"]
+            row.update({
+                "compute_s": r["compute_s"],
+                "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"],
+                "dominant": r["dominant"],
+                "roofline_fraction": r["roofline_fraction"],
+                "useful_flops_ratio": r["useful_flops_ratio"],
+                "mem_gib": c["memory"]["peak_estimate_bytes"] / 2**30,
+                "analytic_gib": _analytic_gib(c),
+                "collective_gib": p["total_collective_bytes"] / 2**30,
+            })
+        rows.append(row)
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    rows = table(mesh)
+    out = ["| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | frac | useful | mem GiB (analytic) |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"SKIP (full-attention @500k) | — | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{r['roofline_fraction']:.2f} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['mem_gib']:.1f} ({r['analytic_gib']:.1f}) |")
+    return "\n".join(out)
+
+
+def roofline_report() -> None:
+    with timer() as t:
+        rows = [r for r in table("single") if r["status"] == "ok"]
+        if not rows:
+            emit("roofline_report", t.seconds,
+                 {"error": "run repro.launch.dryrun first"})
+            return
+        dominated = {}
+        for r in rows:
+            dominated[r["dominant"]] = dominated.get(r["dominant"], 0) + 1
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        best = max(rows, key=lambda r: r["roofline_fraction"])
+        multi = [r for r in table("multi") if r["status"] == "ok"]
+    emit("roofline_report", t.seconds, {
+        "single_pod_cells_ok": len(rows),
+        "multi_pod_cells_ok": len(multi),
+        "skips": 8,
+        "dominant_term_histogram": dominated,
+        "worst_cell": f"{worst['arch']}x{worst['shape']}"
+                      f"={worst['roofline_fraction']:.3f}",
+        "best_cell": f"{best['arch']}x{best['shape']}"
+                     f"={best['roofline_fraction']:.3f}",
+        "mean_fraction_train": round(
+            sum(r["roofline_fraction"] for r in rows
+                if r["shape"] == "train_4k")
+            / max(len([r for r in rows if r["shape"] == "train_4k"]), 1),
+            3),
+    })

@@ -1,0 +1,49 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline and
+kernel benches.  Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="subsample fig5's 640 workloads to 64")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, paper_figs, roofline_report
+
+    benches = {
+        "fig1": paper_figs.fig1_motivation,
+        "fig2": paper_figs.fig2_characterization,
+        "fig3": paper_figs.fig3_prefetch_alloc,
+        "fig4": paper_figs.fig4_leslie3d,
+        "fig5": (lambda: paper_figs.fig5_potential(
+            64 if args.quick else 640)),
+        "fig9_10": paper_figs.fig9_fig10_main,
+        "fig11": paper_figs.fig11_case_study,
+        "fig12": paper_figs.fig12_sensitivity,
+        "kernel_flash_attention": kernel_bench.flash_attention_bench,
+        "kernel_flash_decode": kernel_bench.flash_decode_bench,
+        "kernel_ssd_scan": kernel_bench.ssd_scan_bench,
+        "kernel_cbp_matmul": kernel_bench.cbp_matmul_knob_sweep,
+        "roofline": roofline_report.roofline_report,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            fn()
+        except Exception as exc:  # noqa: BLE001
+            print(f"{name},0,ERROR={type(exc).__name__}:{exc}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

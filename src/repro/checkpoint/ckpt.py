@@ -1,0 +1,170 @@
+"""Sharded, atomic, async checkpointing (fault-tolerance substrate).
+
+Layout: one directory per step containing ``<leaf-path>.npy`` files plus a
+msgpack manifest with the treedef, dtypes and the data-pipeline state.
+Writes go to ``<dir>.tmp`` and are renamed atomically; a ``LATEST`` file is
+updated last, so a crash mid-save can never corrupt the restore point
+(restart always resumes from the last complete step).  ``save_async``
+snapshots to host memory synchronously (cheap) and writes in a background
+thread so the train loop is not blocked — the paper's "bandwidth" knob in
+this substrate is the rate limit on these background writes, which the CBP
+bandwidth controller can squeeze when the input pipeline is starved.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import msgpack
+import numpy as np
+
+# numpy can't round-trip bf16/fp8 natively; store them as uint16/uint8 views
+_VIEW_DTYPES = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+                "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn)}
+
+
+def _flatten_with_names(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[name] = np.asarray(leaf)
+    return flat
+
+
+def save_pytree(tree, directory: pathlib.Path,
+                extra: Optional[Dict] = None,
+                rate_limit_mbps: Optional[float] = None) -> None:
+    directory = pathlib.Path(directory)
+    tmp = directory.with_suffix(".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten_with_names(tree)
+    manifest = {"leaves": {}, "extra": extra or {}}
+    for name, arr in flat.items():
+        fn = name.replace("/", "__") + ".npy"
+        t0 = time.monotonic()
+        disk = arr
+        if str(arr.dtype) in _VIEW_DTYPES:
+            disk = arr.view(_VIEW_DTYPES[str(arr.dtype)][0])
+        np.save(tmp / fn, disk)
+        if rate_limit_mbps:
+            expect = arr.nbytes / (rate_limit_mbps * 1e6)
+            sleep = expect - (time.monotonic() - t0)
+            if sleep > 0:
+                time.sleep(sleep)
+        manifest["leaves"][name] = {
+            "file": fn, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+    (tmp / "manifest.msgpack").write_bytes(msgpack.packb(manifest))
+    if directory.exists():
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+
+
+def load_pytree(directory: pathlib.Path, like) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  Returns (tree, extra)."""
+    directory = pathlib.Path(directory)
+    manifest = msgpack.unpackb(
+        (directory / "manifest.msgpack").read_bytes())
+    flat_like = _flatten_with_names(like) if not isinstance(like, dict) or \
+        True else like
+    names = list(flat_like)
+    leaves_meta = manifest["leaves"]
+    arrays = {}
+    for name in names:
+        meta = leaves_meta[name]
+        arr = np.load(directory / meta["file"])
+        if meta["dtype"] in _VIEW_DTYPES:
+            arr = arr.view(_VIEW_DTYPES[meta["dtype"]][1])
+        arrays[name] = arr
+    # Rebuild in `like` order.
+    flat_paths = jax.tree_util.tree_flatten_with_path(like)
+    rebuilt = []
+    for path, leaf in flat_paths[0]:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = arrays[name]
+        if hasattr(leaf, "dtype") and arr.dtype != leaf.dtype:
+            arr = np.asarray(jax.numpy.asarray(arr).astype(leaf.dtype))
+        rebuilt.append(arr)
+    tree = jax.tree_util.tree_unflatten(flat_paths[1], rebuilt)
+    return tree, manifest.get("extra", {})
+
+
+class CheckpointManager:
+    """keep-last-k manager with async save and crash-safe restore."""
+
+    def __init__(self, root: pathlib.Path, keep: int = 3):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.write_rate_limit_mbps: Optional[float] = None  # CBP bw knob
+
+    def _step_dir(self, step: int) -> pathlib.Path:
+        return self.root / f"step_{step:010d}"
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        save_pytree(tree, self._step_dir(step), extra,
+                    rate_limit_mbps=self.write_rate_limit_mbps)
+        (self.root / "LATEST.tmp").write_text(str(step))
+        os.replace(self.root / "LATEST.tmp", self.root / "LATEST")
+        self._gc()
+
+    def save_async(self, step: int, tree,
+                   extra: Optional[Dict] = None) -> None:
+        """Snapshot now (device->host copy), write in the background."""
+        self.wait()
+        snapshot = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def _write():
+            self.save(step, snapshot, extra)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def latest_step(self) -> Optional[int]:
+        latest = self.root / "LATEST"
+        if not latest.exists():
+            return None
+        step = int(latest.read_text().strip())
+        if not self._step_dir(step).exists():
+            # crash between data write and LATEST update: fall back
+            steps = self.all_steps()
+            return steps[-1] if steps else None
+        return step
+
+    def all_steps(self):
+        out = []
+        for p in self.root.iterdir():
+            m = re.match(r"step_(\d+)$", p.name)
+            if m and (p / "manifest.msgpack").exists():
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def restore_latest(self, like) -> Optional[Tuple[int, Any, Dict]]:
+        step = self.latest_step()
+        if step is None:
+            return None
+        tree, extra = load_pytree(self._step_dir(step), like)
+        return step, tree, extra
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

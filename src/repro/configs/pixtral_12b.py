@@ -1,0 +1,36 @@
+"""pixtral-12b — assigned architecture config.
+
+# [vlm] pixtral-ViT frontend STUBBED (precomputed patch embeddings);
+# mistral-nemo decoder backbone [hf:mistralai/Pixtral-12B-2409; unverified]
+"""
+from repro.models.config import ModelConfig
+import dataclasses
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=14336,
+    vocab_size=131072,
+    frontend='patch',
+)
+
+# Reduced same-family smoke config: tiny widths/depths, one CPU train step.
+SMOKE = dataclasses.replace(
+    CONFIG,
+    param_dtype='float32',
+    remat='none',
+    attn_chunk=64,
+    seq_shard_activations=False,
+    vocab_size=512,
+    d_model=64,
+    d_ff=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=16,
+)

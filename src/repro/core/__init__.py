@@ -1,0 +1,33 @@
+"""CBP: coordinated cache partitioning, bandwidth partitioning and prefetch
+throttling (Holtryd et al., 2021) — the paper's primary contribution.
+
+The three local controllers (paper §3.2) and the coordination mechanism
+(paper §3.3) are domain-agnostic; they are bound to the CMP interval model in
+``repro.sim`` (faithful reproduction) and to TPU memory-system knobs in
+``repro.runtime`` / ``repro.serving`` / ``repro.kernels`` (hardware
+adaptation — see DESIGN.md §2).
+"""
+from repro.core.atd import SampledATD, StackDistanceMonitor
+from repro.core.bandwidth_controller import BandwidthController, allocate_bandwidth
+from repro.core.cache_controller import CacheController, lookahead_allocate
+from repro.core.coordinator import CBPCoordinator, Plant
+from repro.core.prefetch_controller import PrefetchController, throttle_decision
+from repro.core.types import Allocation, CBPParams, IntervalStats, Mode, PrefetchMode
+
+__all__ = [
+    "SampledATD",
+    "StackDistanceMonitor",
+    "BandwidthController",
+    "allocate_bandwidth",
+    "CacheController",
+    "lookahead_allocate",
+    "CBPCoordinator",
+    "Plant",
+    "PrefetchController",
+    "throttle_decision",
+    "Allocation",
+    "CBPParams",
+    "IntervalStats",
+    "Mode",
+    "PrefetchMode",
+]

@@ -1,0 +1,75 @@
+"""Bandwidth-allocation controller (paper §3.2.2, Algorithm 1).
+
+Partitions total bandwidth proportionally to the per-client memory queuing
+delay observed in the previous interval: clients that waited longer get more.
+Every client first receives ``min_bandwidth_allocation`` ("in order to avoid
+unfairly giving a very low allocation to applications with a small queuing
+delay"); the remainder is split pro-rata by accumulated delay.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def allocate_bandwidth(
+    queuing_delay: np.ndarray,
+    total_bandwidth: float,
+    min_allocation: float,
+) -> np.ndarray:
+    """Algorithm 1, verbatim.
+
+    Args:
+      queuing_delay: (n,) accumulated per-client queuing delays (any unit —
+        only proportions matter).
+      total_bandwidth: capacity to distribute (GB/s).
+      min_allocation: per-client floor (GB/s).
+
+    Returns:
+      (n,) float allocation summing to ``total_bandwidth``.
+    """
+    delay = np.asarray(queuing_delay, dtype=np.float64)
+    n = len(delay)
+    if min_allocation * n > total_bandwidth:
+        raise ValueError("min_allocation * n exceeds total bandwidth")
+
+    # line 2: remaining after floors
+    remaining = total_bandwidth - min_allocation * n
+    alloc = np.full(n, min_allocation, dtype=np.float64)  # line 5
+
+    total_delay = float(delay.sum())  # line 4
+    if total_delay <= 0.0:
+        # No one queued: split the remainder evenly.
+        alloc += remaining / n
+    else:
+        # lines 7-9: proportional share of the remainder
+        alloc += delay / total_delay * remaining
+
+    return alloc
+
+
+class BandwidthController:
+    """Stateful wrapper: accumulates delays across intervals (paper §3.3,
+
+    "per application queuing delays are accumulated with those from the
+    previous interval"), with a decay factor so stale phases wash out.
+    """
+
+    def __init__(self, total_bandwidth: float, min_allocation: float,
+                 decay: float = 0.5):
+        self.total_bandwidth = total_bandwidth
+        self.min_allocation = min_allocation
+        self.decay = decay
+        self._acc: np.ndarray | None = None
+
+    def observe(self, queuing_delay: np.ndarray) -> None:
+        delay = np.asarray(queuing_delay, dtype=np.float64)
+        if self._acc is None:
+            self._acc = delay.copy()
+        else:
+            self._acc = self.decay * self._acc + delay
+
+    def allocate(self) -> np.ndarray:
+        if self._acc is None:
+            raise RuntimeError("no delays observed yet")
+        return allocate_bandwidth(
+            self._acc, self.total_bandwidth, self.min_allocation)

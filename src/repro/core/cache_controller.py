@@ -1,0 +1,96 @@
+"""Cache-allocation controller: UCP Lookahead (paper §3.2.1).
+
+The controller consumes per-client *utility curves* — hits as a function of
+allocated units, measured by the ATD — and produces an integer allocation
+that greedily maximizes marginal utility (misses avoided per unit), exactly
+as in Qureshi & Patt's Lookahead algorithm.  A ``min_units`` floor is applied
+before distribution to adapt to an inclusive hierarchy (paper: "we assign a
+minimum allocation of cache space (min_ways) to all the applications before
+distributing the remaining capacity").
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _max_marginal_utility(curve: np.ndarray, have: int, balance: int):
+    """Lookahead's get_max_mu: best (utility/units) step from ``have``.
+
+    Returns ``(mu, k)`` where ``k`` maximizes
+    ``(curve[have + k] - curve[have]) / k`` over ``1 <= k <= balance``.
+    """
+    top = min(have + balance, len(curve) - 1)
+    if top <= have:
+        return 0.0, 0
+    ks = np.arange(1, top - have + 1)
+    gains = curve[have + 1: top + 1] - curve[have]
+    mus = gains / ks
+    best = int(np.argmax(mus))
+    return float(mus[best]), int(ks[best])
+
+
+def lookahead_allocate(
+    utility_curves: np.ndarray,
+    total_units: int,
+    min_units: int = 4,
+) -> np.ndarray:
+    """Allocate ``total_units`` among clients by greedy marginal utility.
+
+    Args:
+      utility_curves: (n, total_units + 1); ``[i, u]`` = hits for client ``i``
+        with ``u`` units.  Need not be normalized; only differences matter.
+      total_units: capacity to distribute (e.g. 256 x 32 kB = 8 MB).
+      min_units: floor per client (paper's ``min_ways``).
+
+    Returns:
+      (n,) int allocation summing exactly to ``total_units``.
+    """
+    curves = np.asarray(utility_curves, dtype=np.float64)
+    n = curves.shape[0]
+    if curves.shape[1] != total_units + 1:
+        raise ValueError(
+            f"utility curves must have {total_units + 1} points, "
+            f"got {curves.shape[1]}")
+    if n * min_units > total_units:
+        raise ValueError("min_units * n exceeds capacity")
+
+    alloc = np.full(n, min_units, dtype=np.int64)
+    balance = total_units - int(alloc.sum())
+
+    while balance > 0:
+        best_mu = -1.0
+        best_i = -1
+        best_k = 0
+        for i in range(n):
+            mu, k = _max_marginal_utility(curves[i], int(alloc[i]), balance)
+            if k > 0 and mu > best_mu:
+                best_mu, best_i, best_k = mu, i, k
+        if best_i < 0 or best_mu <= 0.0:
+            # No client gains from more cache: spread the remainder evenly
+            # (UCP leaves no capacity idle).
+            order = np.argsort(-(curves[:, -1] - curves[np.arange(n), alloc]))
+            j = 0
+            while balance > 0:
+                i = int(order[j % n])
+                if alloc[i] < total_units:
+                    alloc[i] += 1
+                    balance -= 1
+                j += 1
+            break
+        alloc[best_i] += best_k
+        balance -= best_k
+
+    assert int(alloc.sum()) == total_units
+    return alloc
+
+
+class CacheController:
+    """Stateful wrapper pairing :func:`lookahead_allocate` with an ATD."""
+
+    def __init__(self, total_units: int, min_units: int = 4):
+        self.total_units = total_units
+        self.min_units = min_units
+
+    def allocate(self, utility_curves: np.ndarray) -> np.ndarray:
+        return lookahead_allocate(
+            utility_curves, self.total_units, self.min_units)

@@ -1,0 +1,181 @@
+"""CBP coordination mechanism (paper §3.3, Figs. 6-8).
+
+The coordinator owns the three local controllers and runs the Fig. 8
+timeline against a *plant* — anything that can execute an interval under an
+allocation and report :class:`~repro.core.types.IntervalStats`.  Two plants
+exist in this repo: the 16-core CMP interval model (``repro.sim.runner``,
+faithful reproduction) and the TPU runtime knob binding
+(``repro.runtime.cbp_runtime``).
+
+Controller prioritization (paper §3.3): cache first ("avoiding a memory
+access is typically more effective than lowering the memory access
+penalty"), then bandwidth, then prefetch ("the prefetcher setting is
+determined based on the current allocation of cache and bandwidth").
+
+Inter-controller feedback is implicit in the measurement loop, exactly as in
+the paper: the bandwidth controller sees queuing delays that already reflect
+the cache allocation (#1) and prefetch misses (#2); prefetch A/B samples run
+under the current cache+bandwidth allocation (#3, #4); the ATD counters see
+prefetch hits, shrinking the next cache allocation for prefetch-friendly
+clients (#5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Protocol
+
+import numpy as np
+
+from repro.core.atd import SampledATD
+from repro.core.bandwidth_controller import BandwidthController
+from repro.core.cache_controller import CacheController
+from repro.core.prefetch_controller import PrefetchController
+from repro.core.types import Allocation, CBPParams, IntervalStats, Mode, PrefetchMode
+
+
+class Plant(Protocol):
+    """What the coordinator manages."""
+
+    n_clients: int
+    total_cache_units: int
+    total_bandwidth: float
+
+    def run_interval(self, alloc: Allocation,
+                     duration_ms: float) -> IntervalStats:
+        """Execute ``duration_ms`` under ``alloc`` and report observations."""
+        ...
+
+
+@dataclasses.dataclass
+class IntervalRecord:
+    t_ms: float
+    duration_ms: float
+    alloc: Allocation
+    stats: IntervalStats
+
+
+class CBPCoordinator:
+    """Dynamically manage cache, bandwidth and prefetch (paper Fig. 8).
+
+    ``cache_mode`` / ``bandwidth_mode`` / ``prefetch_mode`` select the
+    Table-3 resource-manager family; CBP proper is (DYNAMIC, DYNAMIC,
+    DYNAMIC).  Subset managers (e.g. ``cache+pref``) reuse the same loop
+    with the unmanaged resource pinned, which is how the paper's comparison
+    configurations are built.
+    """
+
+    def __init__(
+        self,
+        plant: Plant,
+        params: Optional[CBPParams] = None,
+        cache_mode: Mode = Mode.DYNAMIC,
+        bandwidth_mode: Mode = Mode.DYNAMIC,
+        prefetch_mode: PrefetchMode = PrefetchMode.DYNAMIC,
+    ):
+        self.plant = plant
+        self.params = params or CBPParams()
+        self.cache_mode = cache_mode
+        self.bandwidth_mode = bandwidth_mode
+        self.prefetch_mode = prefetch_mode
+
+        n = plant.n_clients
+        self.atd = SampledATD(n, plant.total_cache_units)
+        self.cache_ctl = CacheController(
+            plant.total_cache_units, self.params.min_ways)
+        self.bw_ctl = BandwidthController(
+            plant.total_bandwidth, self.params.min_bandwidth_allocation)
+        self.pf_ctl = PrefetchController(n, self.params.speedup_threshold)
+        self.history: List[IntervalRecord] = []
+        self._t_ms = 0.0
+
+        # Step 0 (Fig. 8): equal partitions, no miss/delay info yet.
+        self.alloc = self._initial_allocation()
+
+    # ------------------------------------------------------------------ #
+
+    def _initial_allocation(self) -> Allocation:
+        n = self.plant.n_clients
+        units = np.full(n, self.plant.total_cache_units // n, dtype=np.int64)
+        units[: self.plant.total_cache_units - int(units.sum())] += 1
+        bw = np.full(n, self.plant.total_bandwidth / n, dtype=np.float64)
+        pf = np.full(n, self.prefetch_mode == PrefetchMode.ON, dtype=bool)
+        return Allocation(
+            cache_units=units,
+            bandwidth=bw,
+            prefetch_on=pf,
+            cache_mode=self.cache_mode,
+            bandwidth_mode=self.bandwidth_mode,
+        )
+
+    def _run(self, alloc: Allocation, duration_ms: float,
+             record: bool = True) -> IntervalStats:
+        stats = self.plant.run_interval(alloc, duration_ms)
+        self.atd.record(stats.utility_curves * (duration_ms / 1.0))
+        self.bw_ctl.observe(stats.queuing_delay_ns * duration_ms)
+        if record:
+            self.history.append(
+                IntervalRecord(self._t_ms, duration_ms, alloc.copy(), stats))
+        self._t_ms += duration_ms
+        return stats
+
+    def _sample_prefetch(self) -> None:
+        """Step 1 / Step 4 (Fig. 8): A/B sample IPC over 2x sampling period.
+
+        The samples run under the *current* cache+bandwidth allocation —
+        interactions #3/#4.
+        """
+        p = self.params.prefetch_sampling_period_ms
+        off = self.alloc.copy()
+        off.prefetch_on = np.zeros(self.plant.n_clients, dtype=bool)
+        on = self.alloc.copy()
+        on.prefetch_on = np.ones(self.plant.n_clients, dtype=bool)
+        stats_off = self._run(off, p)
+        stats_on = self._run(on, p)
+        enabled = self.pf_ctl.update(stats_on.ipc, stats_off.ipc)
+        self.alloc.prefetch_on = enabled
+
+    def _reconfigure(self) -> None:
+        """Reconfiguration boundary: cache -> bandwidth (priority order)."""
+        if self.cache_mode == Mode.DYNAMIC:
+            # Interaction #5: the utility curves already include prefetch
+            # hits, so prefetch-friendly clients present flatter curves and
+            # receive less cache.
+            self.alloc.cache_units = self.cache_ctl.allocate(
+                self.atd.utility_curves())
+        self.atd.halve()
+        if self.bandwidth_mode == Mode.DYNAMIC:
+            # Interactions #1/#2: delays reflect cache allocation and
+            # prefetch misses of the prior interval.
+            self.alloc.bandwidth = self.bw_ctl.allocate()
+
+    # ------------------------------------------------------------------ #
+
+    def run(self, total_ms: float) -> List[IntervalRecord]:
+        """Run the Fig. 8 timeline for ``total_ms``."""
+        p = self.params
+        first = True
+        while self._t_ms < total_ms - 1e-9:
+            if not first:
+                self._reconfigure()  # Steps 2-3
+            # Step 1/4: prefetch sampling + decision for this interval.
+            sampled = 0.0
+            if self.prefetch_mode == PrefetchMode.DYNAMIC:
+                self._sample_prefetch()
+                sampled = 2 * p.prefetch_sampling_period_ms
+            remain = min(p.reconfiguration_interval_ms - sampled,
+                         total_ms - self._t_ms)
+            if remain > 0:
+                self._run(self.alloc, remain)
+            first = False
+        return self.history
+
+    # Aggregation helpers ------------------------------------------------ #
+
+    def mean_ipc(self) -> np.ndarray:
+        """Time-weighted mean performance per client over the run."""
+        total = np.zeros(self.plant.n_clients)
+        t = 0.0
+        for rec in self.history:
+            total += rec.stats.ipc * rec.duration_ms
+            t += rec.duration_ms
+        return total / max(t, 1e-12)

@@ -1,0 +1,91 @@
+"""Shared types for the CBP resource manager (paper §3).
+
+These types are deliberately domain-agnostic: the same controllers drive the
+CMP interval model (``repro.sim`` — the faithful reproduction) and the TPU
+runtime knobs (``repro.runtime`` / ``repro.serving`` — the hardware
+adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+
+class Mode(enum.Enum):
+    """How one of the three resources is managed (paper Table 3)."""
+
+    UNPARTITIONED = "unpartitioned"  # free-for-all sharing (baseline)
+    EQUAL = "equal"                  # static equal split ("equal off")
+    DYNAMIC = "dynamic"              # managed by the local controller
+
+
+class PrefetchMode(enum.Enum):
+    OFF = "off"          # disabled for everyone (baseline / "* off" managers)
+    ON = "on"            # enabled for everyone ("equal on")
+    DYNAMIC = "dynamic"  # Algorithm 2 per-client throttling
+
+
+@dataclasses.dataclass
+class Allocation:
+    """A complete resource assignment for ``n`` clients.
+
+    ``cache_units`` are allocation quanta (32 kB in the CMP model — one way of
+    a 16-way 512 kB bank; KV pages or VMEM bytes in the TPU binding).
+    ``bandwidth`` is in GB/s (CMP) or share-of-link (TPU).
+    """
+
+    cache_units: np.ndarray          # (n,) int
+    bandwidth: np.ndarray            # (n,) float
+    prefetch_on: np.ndarray          # (n,) bool
+    cache_mode: Mode = Mode.DYNAMIC
+    bandwidth_mode: Mode = Mode.DYNAMIC
+
+    @property
+    def n(self) -> int:
+        return len(self.cache_units)
+
+    def copy(self) -> "Allocation":
+        return Allocation(
+            cache_units=self.cache_units.copy(),
+            bandwidth=self.bandwidth.copy(),
+            prefetch_on=self.prefetch_on.copy(),
+            cache_mode=self.cache_mode,
+            bandwidth_mode=self.bandwidth_mode,
+        )
+
+
+@dataclasses.dataclass
+class IntervalStats:
+    """Observations gathered while running one interval under an allocation.
+
+    ``utility_curves[i, u]`` = hits client ``i`` would have seen with ``u``
+    cache units during the interval (the ATD / stack-distance measurement,
+    paper §3.2.1).  ``queuing_delay_ns`` is the mean per-request memory
+    queuing delay (paper §3.2.2).  ``ipc`` is the performance signal sampled
+    by the prefetch controller (paper §3.2.3); in the TPU binding it is
+    tokens/sec or 1/step-time.
+    """
+
+    ipc: np.ndarray                   # (n,)
+    queuing_delay_ns: np.ndarray      # (n,)
+    utility_curves: np.ndarray        # (n, total_units + 1)
+    instructions: Optional[np.ndarray] = None  # (n,) work completed
+
+    @property
+    def n(self) -> int:
+        return len(self.ipc)
+
+
+@dataclasses.dataclass
+class CBPParams:
+    """CBP tunables (paper Table 1, bottom block)."""
+
+    reconfiguration_interval_ms: float = 10.0
+    prefetch_sampling_period_ms: float = 0.5
+    speedup_threshold: float = 1.05
+    prefetch_interval_ms: float = 10.0
+    min_bandwidth_allocation: float = 1.0   # GB/s
+    min_ways: int = 4                       # allocation quanta floor

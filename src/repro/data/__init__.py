@@ -1,0 +1,3 @@
+from repro.data.pipeline import PrefetchPipeline, SyntheticTokens
+
+__all__ = ["PrefetchPipeline", "SyntheticTokens"]

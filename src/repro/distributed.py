@@ -1,0 +1,101 @@
+"""Ambient mesh context for sharding constraints inside model code.
+
+Model code calls :func:`constrain` on activations; when a mesh has been
+installed by the launcher the call lowers to
+``jax.lax.with_sharding_constraint`` with a :class:`NamedSharding`, and when
+running unsharded (CPU smoke tests) it is a no-op.  Axis names that are not
+present in the installed mesh are dropped from the spec, so the same model
+code serves the (data, model), (pod, data, model) and single-device cases.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_state = threading.local()
+
+# Logical axis groups: "dp" spreads over every data-parallel mesh axis.
+DP_AXES = ("pod", "data")
+
+
+def set_dp_axes(axes) -> None:
+    """Override which mesh axes count as data-parallel ("dp") — e.g.
+    ("pod", "data", "model") for pure-DP tiny models."""
+    _state.dp_axes = tuple(axes)
+
+
+def get_dp_axes():
+    return getattr(_state, "dp_axes", DP_AXES)
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    _state.mesh = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = get_mesh()
+    set_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_mesh(prev)
+
+
+def _resolve_axis(axis, mesh: Mesh):
+    """Map a logical axis (or tuple) to the axes present in ``mesh``."""
+    if axis is None:
+        return None
+    if axis == "dp":
+        present = tuple(a for a in get_dp_axes() if a in mesh.axis_names)
+        return present if present else None
+    if isinstance(axis, tuple):
+        present = tuple(a for a in axis if a in mesh.axis_names)
+        return present if present else None
+    return axis if axis in mesh.axis_names else None
+
+
+def spec(*axes) -> PartitionSpec:
+    """Build a PartitionSpec against the ambient mesh ("dp" = all DP axes).
+
+    Mesh axes already claimed by an earlier entry are dropped from later
+    entries (e.g. pure-DP mode resolves "dp" to ("data", "model"), so a
+    subsequent explicit "model" entry becomes None)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return PartitionSpec(*([None] * len(axes)))
+    used = set()
+    out = []
+    for a in axes:
+        r = _resolve_axis(a, mesh)
+        if r is None:
+            out.append(None)
+            continue
+        if isinstance(r, tuple):
+            r = tuple(x for x in r if x not in used)
+            used.update(r)
+            out.append(r if r else None)
+        else:
+            if r in used:
+                out.append(None)
+            else:
+                used.add(r)
+                out.append(r)
+    return PartitionSpec(*out)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh (no-op if none)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec(*axes)))

@@ -1,0 +1,76 @@
+"""CBP-managed blocked matmul — the kernel-level demonstrator of the
+paper's three knobs on one op (DESIGN.md §2):
+
+  * cache partitioning: (block_m, block_n, block_k) split the VMEM budget
+    between the A tile, B tile and accumulator — the exact analogue of
+    LLC way allocation.  ``repro.runtime.cbp_runtime.plan_matmul_blocks``
+    runs the UCP Lookahead allocator over tile-utility curves to pick them.
+  * prefetch throttling: TPU pipelines double-buffer streamed inputs;
+    block_k sets how much VMEM the in-flight K-panels occupy (deep
+    prefetch = large block_k); throttling = shrinking it.
+  * bandwidth: the (m-major, n, k-inner) grid order streams B panels
+    sequentially and reuses the A tile across n — HBM traffic per output
+    tile is the allocation-dependent quantity CBP trades against VMEM.
+
+Grid (m, n, k), k innermost with an f32 VMEM accumulator carried across
+k steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, acc_scr):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        a_ref[...].astype(jnp.float32), b_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def cbp_matmul(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
+               block_n: int = 128, block_k: int = 128,
+               interpret: bool = False) -> jnp.ndarray:
+    """(M, K) @ (K, N) with explicit VMEM tiling."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, block_k: int,
+                         dtype_bytes: int = 2) -> int:
+    """VMEM bytes the tiling claims (x2 on streamed tiles for the
+    pipeline's double buffering) — the quantity CBP partitions."""
+    a_tile = 2 * block_m * block_k * dtype_bytes
+    b_tile = 2 * block_k * block_n * dtype_bytes
+    acc = block_m * block_n * 4
+    out = block_m * block_n * dtype_bytes
+    return a_tile + b_tile + acc + out

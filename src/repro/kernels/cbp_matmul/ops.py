@@ -1,0 +1,21 @@
+"""Jitted wrapper for the CBP blocked matmul."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cbp_matmul.kernel import cbp_matmul as _kernel
+from repro.kernels.cbp_matmul.kernel import vmem_footprint_bytes
+from repro.kernels.cbp_matmul.ref import matmul_ref
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k"))
+def cbp_matmul(a, b, *, block_m: int = 128, block_n: int = 128,
+               block_k: int = 128):
+    return _kernel(a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+                   interpret=jax.default_backend() != "tpu")
+
+
+__all__ = ["cbp_matmul", "matmul_ref", "vmem_footprint_bytes"]

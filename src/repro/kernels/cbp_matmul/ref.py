@@ -1,0 +1,7 @@
+"""Oracle for the blocked matmul kernel."""
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)).astype(
+        a.dtype)

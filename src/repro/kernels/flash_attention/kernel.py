@@ -1,0 +1,128 @@
+"""Flash attention forward — Pallas TPU kernel with CBP-tunable VMEM knobs.
+
+This is where the paper's three knobs re-materialize at the VMEM level
+(DESIGN.md §2, hardware adaptation):
+
+  * cache partitioning  -> (block_q, block_kv): how the VMEM budget is split
+    between the resident Q/accumulator tiles and the streamed K/V tiles;
+  * prefetch throttling -> the TPU pipeline double-buffers the streamed K/V
+    blocks; a larger block_kv = deeper effective prefetch per grid step
+    (more VMEM for in-flight tiles), a smaller one throttles it;
+  * bandwidth           -> the grid iteration order (q-major) keeps K/V
+    streaming sequential in HBM, and the causal schedule skips fully-masked
+    K/V blocks so no HBM bandwidth is spent on them.
+
+``repro.runtime.cbp_runtime.KernelKnobs`` drives (block_q, block_kv) from
+the CBP cache controller's VMEM budget split.
+
+Grid: (B*H, n_q_blocks, n_kv_blocks); the kv axis is innermost (sequential
+on TPU) and carries the running max/sum/acc in VMEM scratch (standard
+online-softmax flash schedule).  Causal skipping uses `pl.when` so masked
+blocks cost neither MXU time nor (on TPU) the HBM fetch of the block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref,
+                      m_scr, l_scr, acc_scr,
+                      *, scale: float, causal: bool,
+                      block_q: int, block_kv: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Causal: skip blocks strictly above the diagonal.
+    run = True
+    if causal:
+        run = (kj * block_kv) <= (qi * block_q + block_q - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0].astype(jnp.float32)            # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bkv)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            kpos = kj * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]                         # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *, causal: bool = True, block_q: int = 128, block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q/k/v: (B, H, S, Dh) -> (B, H, S, Dh).
+
+    block_q/block_kv are the CBP VMEM-partitioning knobs: VMEM use is
+    roughly  block_q*(Dh + block_kv + 3) + 2*block_kv*Dh  f32 words
+    (x2 for the pipeline's double buffering of the streamed operands).
+    """
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    assert sq % block_q == 0 and sk % block_kv == 0, (sq, sk, block_q,
+                                                      block_kv)
+    bh = b * h
+    qr = q.reshape(bh, sq, dh)
+    kr = k.reshape(bh, sk, dh)
+    vr = v.reshape(bh, sk, dh)
+    grid = (bh, sq // block_q, sk // block_kv)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, scale=dh ** -0.5, causal=causal,
+        block_q=block_q, block_kv=block_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, dh)

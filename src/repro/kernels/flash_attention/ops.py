@@ -1,0 +1,31 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Selects interpret mode automatically off-TPU (the container validates the
+kernel body on CPU; real deployments lower it to Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q",
+                                             "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128):
+    """(B, H, S, Dh) attention; CBP-tunable VMEM blocks."""
+    return flash_attention_fwd(
+        q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=not _on_tpu())
+
+
+__all__ = ["flash_attention", "attention_ref"]

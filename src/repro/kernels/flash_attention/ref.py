@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """q/k/v: (B, H, S, Dh) -> (B, H, S, Dh).  f32 softmax statistics."""
+    _, _, sq, dh = q.shape
+    sk = k.shape[2]
+    scores = jnp.einsum(
+        "bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * (dh ** -0.5)
+    if causal:
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(
+        "bhqk,bhkd->bhqd", probs.astype(v.dtype), v)

@@ -1,0 +1,100 @@
+"""Flash decode — single-token attention against a long KV cache.
+
+Decode is the memory-roofline case (the whole KV cache streams through
+VMEM once per token), so the CBP knobs bind differently than in prefill:
+``block_kv`` controls the streaming granularity (prefetch depth ~ one
+block in flight), and the valid-length mask means blocks entirely past
+``cur_len`` are skipped — the kernel never spends HBM bandwidth on the
+unwritten tail of the ring buffer.
+
+Grid: (B*H, n_kv_blocks), kv innermost, online-softmax scratch carries
+(m, l, acc).  ``cur_len`` arrives via scalar prefetch (SMEM) so the skip
+predicate is known before the block's DMA is issued.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, block_kv: int, scale: float):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    cur_len = len_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j * block_kv < cur_len)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)             # (1, d)
+        k = k_ref[0].astype(jnp.float32)             # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (1, bkv)
+        pos = j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1)
+        s = jnp.where(pos < cur_len, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _done():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                 cur_len, *, block_kv: int = 512,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q: (B, H, Dh); caches: (B, H, Smax, Dh); cur_len: () int32."""
+    b, h, dh = q.shape
+    smax = k_cache.shape[2]
+    assert smax % block_kv == 0
+    bh = b * h
+    qr = q.reshape(bh, 1, dh)
+    kr = k_cache.reshape(bh, smax, dh)
+    vr = v_cache.reshape(bh, smax, dh)
+    lens = jnp.full((1,), cur_len, jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, smax // block_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda g, j, lens: (g, 0, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda g, j, lens: (g, j, 0)),
+            pl.BlockSpec((1, block_kv, dh), lambda g, j, lens: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda g, j, lens: (g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, block_kv=block_kv,
+                          scale=dh ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, 1, dh), q.dtype),
+        interpret=interpret,
+    )(lens, qr, kr, vr)
+    return out.reshape(b, h, dh)

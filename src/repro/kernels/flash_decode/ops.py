@@ -1,0 +1,18 @@
+"""Jitted wrapper for flash decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_decode.kernel import flash_decode as _kernel
+from repro.kernels.flash_decode.ref import decode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv",))
+def flash_decode(q, k_cache, v_cache, cur_len, *, block_kv: int = 512):
+    return _kernel(q, k_cache, v_cache, cur_len, block_kv=block_kv,
+                   interpret=jax.default_backend() != "tpu")
+
+
+__all__ = ["flash_decode", "decode_ref"]

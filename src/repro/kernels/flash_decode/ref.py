@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for single-token decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+               cur_len: int) -> jnp.ndarray:
+    """q: (B, H, Dh); caches: (B, H, Smax, Dh); attend to [0, cur_len)."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhd,bhsd->bhs", q, k_cache).astype(jnp.float32)
+    s = s * (dh ** -0.5)
+    smax = k_cache.shape[2]
+    mask = jnp.arange(smax)[None, None, :] < cur_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p.astype(v_cache.dtype), v_cache)

@@ -1,0 +1,18 @@
+"""Jitted wrapper for the SSD chunk-scan kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan as _kernel
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    return _kernel(x, dt, A, Bm, Cm, chunk=chunk,
+                   interpret=jax.default_backend() != "tpu")
+
+
+__all__ = ["ssd_scan", "ssd_ref"]

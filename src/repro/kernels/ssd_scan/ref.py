@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Mamba2 SSD chunk scan: the *sequential*
+recurrence, materialized step by step (the ground truth the chunked matmul
+forms must match)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray) -> jnp.ndarray:
+    """Sequential SSD.  x: (B, S, H, P); dt: (B, S, H); A: (H,) negative;
+    Bm/Cm: (B, S, N).  Returns y: (B, S, H, P)."""
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs      # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * A[None, :])            # (B,H)
+        state = (decay[:, :, None, None] * state
+                 + jnp.einsum("bhp,bn,bh->bhpn", xt, bt, dtt))
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, state0,
+        (xf.transpose(1, 0, 2, 3), dtf.transpose(1, 0, 2),
+         Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

@@ -1,0 +1,294 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (spec: MULTI-POD DRY-RUN).
+
+For every (architecture x input-shape x mesh) cell: build the step function
+(train_step / prefill / serve_step per the shape kind), attach shardings,
+``.lower().compile()`` against the production mesh, and record
+memory/cost/collective analysis to a JSON cache.  The XLA_FLAGS line above
+MUST stay the first statement — jax locks the device count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.distributed import set_dp_axes, use_mesh
+from repro.launch import shardings as sh
+from repro.launch.analytic import analytic_memory
+from repro.launch.hlo_parse import analyze
+from repro.launch.mesh import dp_size, make_production_mesh, model_size
+from repro.models import SHAPES, build
+from repro.models.model import Model
+from repro.train.step import TrainStepConfig, build_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# TPU v5e roofline constants (spec: ROOFLINE ANALYSIS)
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+LINK_BW = 50e9            # B/s / ICI link
+
+# Large-model configs use a factored optimizer (DESIGN.md §4: full AdamW
+# state for 314B params does not fit a 256-chip v5e pod).
+OPTIMIZER = {
+    "grok-1-314b": "adafactor",
+    "qwen3-moe-30b-a3b": "adafactor",
+    "yi-34b": "adamw",
+}
+
+# Microbatching for the biggest activation footprints.
+MICROBATCHES = {
+    ("grok-1-314b", "train_4k"): 8,
+    ("yi-34b", "train_4k"): 4,
+    ("pixtral-12b", "train_4k"): 4,
+}
+
+
+def default_microbatches(cfg, shape_name: str) -> int:
+    if SHAPES[shape_name].kind != "train":
+        return 1
+    mb = MICROBATCHES.get((cfg.name, shape_name))
+    if mb:
+        return mb
+    return 2 if cfg.param_count() > 1e9 else 1
+
+
+def _cell_path(mesh_kind: str, arch: str, shape: str) -> pathlib.Path:
+    return RESULTS_DIR / f"{mesh_kind}__{arch}__{shape}.json"
+
+
+def build_cell(model: Model, shape_name: str, mesh, optimizer: str,
+               microbatches: int):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    cfg = model.cfg
+    spec = SHAPES[shape_name]
+    batch_shapes = model.input_specs(shape_name)
+
+    if spec.kind == "train":
+        tcfg = TrainStepConfig(optimizer=optimizer,
+                               microbatches=microbatches)
+        init_opt, train_step = build_train_step(model, tcfg)
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        opt_shape = jax.eval_shape(init_opt, params_shape)
+        pspec = sh.param_specs(cfg, params_shape, mesh)
+        ospec = sh.opt_state_specs(cfg, opt_shape, params_shape, mesh,
+                                   optimizer)
+        bspec = sh.batch_specs(cfg, batch_shapes, mesh)
+        fn = jax.jit(
+            train_step,
+            in_shardings=(sh.named(pspec, mesh), sh.named(ospec, mesh),
+                          sh.named(bspec, mesh)),
+            out_shardings=(sh.named(pspec, mesh), sh.named(ospec, mesh),
+                           None),
+            donate_argnums=(0, 1),
+        )
+        return fn, (params_shape, opt_shape, batch_shapes)
+
+    if spec.kind == "prefill":
+        params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pspec = sh.param_specs(cfg, params_shape, mesh)
+        bspec = sh.batch_specs(cfg, batch_shapes, mesh)
+
+        def prefill(params, batch):
+            return model.prefill(params, batch)
+
+        fn = jax.jit(
+            prefill,
+            in_shardings=(sh.named(pspec, mesh), sh.named(bspec, mesh)))
+        if "labels" in batch_shapes and cfg.family != "encdec" \
+                and "tokens" in batch_shapes:
+            pass
+        return fn, (params_shape, batch_shapes)
+
+    # decode
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    b, s = spec.global_batch, spec.seq_len
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(b, s, dtype=jnp.bfloat16))
+    pspec = sh.param_specs(cfg, params_shape, mesh)
+    cspec = sh.cache_specs(cfg, cache_shape, mesh)
+    bspec = sh.batch_specs(cfg, batch_shapes, mesh)
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"],
+                                 batch["cur_len"])
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(sh.named(pspec, mesh), sh.named(cspec, mesh),
+                      sh.named(bspec, mesh)),
+        out_shardings=(None, sh.named(cspec, mesh)),
+        donate_argnums=(1,),
+    )
+    return fn, (params_shape, cache_shape, batch_shapes)
+
+
+
+def model_flops(cfg, spec, chips: int) -> float:
+    """Spec formula: 6*N*D (train) / 2*N*D (inference), N_active for MoE."""
+    n = cfg.active_param_count()
+    if spec.kind == "train":
+        d = spec.global_batch * spec.seq_len
+        return 6.0 * n * d / chips
+    if spec.kind == "prefill":
+        d = spec.global_batch * spec.seq_len
+        return 2.0 * n * d / chips
+    return 2.0 * n * spec.global_batch / chips  # decode: one token/seq
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             force: bool = False) -> Dict:
+    out_path = _cell_path(mesh_kind, arch, shape_name)
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    cfg = configs.get(arch).with_mesh(model_size(mesh), dp_size(mesh))
+    model = build(cfg)
+    spec = SHAPES[shape_name]
+
+    rec: Dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": chips, "kind": spec.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "status": "skip",
+    }
+    if not model.supports_shape(shape_name):
+        rec["reason"] = ("long_500k requires sub-quadratic sequence mixing;"
+                        f" {arch} is pure full-attention (DESIGN.md §5)")
+        _write(out_path, rec)
+        return rec
+
+    t0 = time.time()
+    try:
+        set_dp_axes(sh.dp_axes_for(cfg))
+        with use_mesh(mesh):
+            fn, args = build_cell(
+                model, shape_name, mesh,
+                OPTIMIZER.get(arch, "adamw"),
+                default_microbatches(cfg, shape_name))
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            ca = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+            cost = analyze(hlo)
+
+        mf = model_flops(cfg, spec, chips)
+        compute_s = cost.flops / PEAK_FLOPS
+        memory_s = cost.hbm_bytes / HBM_BW
+        collective_s = cost.total_collective_bytes / LINK_BW
+        terms = {"compute_s": compute_s, "memory_s": memory_s,
+                 "collective_s": collective_s}
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_estimate_bytes": (mem.argument_size_in_bytes
+                                        + mem.temp_size_in_bytes),
+                "analytic": analytic_memory(
+                    cfg, spec, chips, OPTIMIZER.get(arch, "adamw")),
+            },
+            "xla_cost_analysis": {
+                "flops": ca.get("flops", 0.0),
+                "bytes_accessed": ca.get("bytes accessed", 0.0),
+            },
+            "parsed": {
+                "flops_per_device": cost.flops,
+                "hbm_bytes_per_device": cost.hbm_bytes,
+                "collective_bytes": cost.collective_bytes,
+                "collective_counts": cost.collective_count,
+                "collective_wire_bytes": cost.collective_wire_bytes,
+                "total_collective_bytes": cost.total_collective_bytes,
+            },
+            "roofline": {
+                **terms,
+                "dominant": max(terms, key=terms.get),
+                "model_flops_per_device": mf,
+                "useful_flops_ratio": (mf / cost.flops
+                                       if cost.flops else 0.0),
+                "step_time_bound_s": max(terms.values()),
+                "roofline_fraction": (compute_s / max(terms.values())
+                                      if max(terms.values()) > 0 else 0.0),
+            },
+        })
+    except Exception as exc:  # noqa: BLE001 — record failures as data
+        rec["status"] = "error"
+        rec["error"] = f"{type(exc).__name__}: {exc}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    finally:
+        set_dp_axes(("pod", "data"))
+    _write(out_path, rec)
+    return rec
+
+
+def _write(path: pathlib.Path, rec: Dict) -> None:
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rec, indent=1, default=float))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = configs.names() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_kind, force=args.force)
+                status = rec["status"]
+                if status == "ok":
+                    r = rec["roofline"]
+                    print(f"[{mesh_kind}] {arch} x {shape}: OK "
+                          f"compile={rec['compile_s']}s "
+                          f"dom={r['dominant']} "
+                          f"frac={r['roofline_fraction']:.2f} "
+                          f"mem/dev={rec['memory']['peak_estimate_bytes']/2**30:.2f}GiB",
+                          flush=True)
+                elif status == "skip":
+                    print(f"[{mesh_kind}] {arch} x {shape}: SKIP "
+                          f"({rec['reason'][:60]}...)", flush=True)
+                else:
+                    failures += 1
+                    print(f"[{mesh_kind}] {arch} x {shape}: ERROR "
+                          f"{rec['error'][:160]}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

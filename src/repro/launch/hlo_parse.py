@@ -1,0 +1,280 @@
+"""Post-SPMD HLO text analysis for the roofline (spec: ROOFLINE ANALYSIS).
+
+``compiled.as_text()`` prints per-device shapes (post-partitioning) but XLA's
+``cost_analysis()`` counts while-loop (scan) bodies ONCE — useless for
+scan-over-layers models.  This parser rebuilds the call graph
+(ENTRY -> fusion/call/while computations), reads each while op's
+``known_trip_count`` backend config, and accumulates:
+
+  * dot/convolution FLOPs (2 * prod(out) * prod(contracting dims)),
+  * per-instruction HBM bytes (operands + outputs of top-level scheduled
+    instructions — fusions counted at their interface, a good model of TPU
+    HBM traffic since fused interiors stay in VMEM/registers),
+  * collective bytes by kind (all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute), with ring-model wire bytes.
+
+Everything scales by the product of enclosing trip counts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^)]*?\)?[\w\[\],{}/ ]*?)\s+"
+    r"([\w\-]+)\((.*)$")
+
+
+def _parse_shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _parse_dims(type_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_type: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_wire_bytes: float = 0.0
+    collective_count: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "CostSummary", times: float = 1.0):
+        self.flops += other.flops * times
+        self.hbm_bytes += other.hbm_bytes * times
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = (
+                self.collective_bytes.get(k, 0.0) + v * times)
+        self.collective_wire_bytes += other.collective_wire_bytes * times
+        for k, v in other.collective_count.items():
+            self.collective_count[k] = (
+                self.collective_count.get(k, 0) + int(v * times))
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+class HloModuleCosts:
+    def __init__(self, hlo_text: str):
+        self.computations = self._split_computations(hlo_text)
+        self.entry = next(
+            (n for n in self.computations if n.startswith("ENTRY:")), None)
+        self._memo: Dict[str, CostSummary] = {}
+        # symbol table: per computation, instr name -> out_type
+        self._types: Dict[str, Dict[str, str]] = {}
+        for cname, instrs in self.computations.items():
+            self._types[cname] = {i.name: i.out_type for i in instrs}
+
+    # ---------------- parsing ---------------- #
+
+    @staticmethod
+    def _split_computations(text: str) -> Dict[str, List[Instr]]:
+        comps: Dict[str, List[Instr]] = {}
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if not line.startswith(" ") and "{" in line:
+                header = line.strip()
+                m = re.match(r"(ENTRY\s+)?%?([\w.\-]+)\s*\(", header)
+                if m:
+                    name = m.group(2)
+                    cur = ("ENTRY:" + name) if m.group(1) else name
+                    comps[cur] = []
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                comps[cur].append(Instr(*m.groups()))
+        return comps
+
+    def _lookup(self, comp: str, operand: str) -> str:
+        return self._types.get(comp, {}).get(operand.strip().lstrip("%"), "")
+
+    # ---------------- cost model ---------------- #
+
+    def _dot_flops(self, comp: str, instr: Instr) -> float:
+        out = _parse_dims(instr.out_type)
+        if out is None:
+            return 0.0
+        _, out_dims = out
+        out_n = 1
+        for d in out_dims:
+            out_n *= d
+        # contracting dims from lhs shape + lhs_contracting_dims
+        ops = instr.rest.split(")", 1)[0]
+        operands = [o.strip().lstrip("%") for o in ops.split(",")]
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+        contract = 1
+        if mc and operands:
+            lhs_type = self._lookup(comp, operands[0])
+            lhs = _parse_dims(lhs_type)
+            if lhs:
+                _, lhs_dims = lhs
+                for ci in mc.group(1).split(","):
+                    if ci and int(ci) < len(lhs_dims):
+                        contract *= lhs_dims[int(ci)]
+        return 2.0 * out_n * contract
+
+    def _conv_flops(self, comp: str, instr: Instr) -> float:
+        out = _parse_dims(instr.out_type)
+        if out is None:
+            return 0.0
+        _, out_dims = out
+        out_n = 1
+        for d in out_dims:
+            out_n *= d
+        ops = instr.rest.split(")", 1)[0]
+        operands = [o.strip().lstrip("%") for o in ops.split(",")]
+        kernel_n = 1
+        if len(operands) >= 2:
+            k = _parse_dims(self._lookup(comp, operands[1]))
+            if k:
+                _, kd = k
+                for d in kd:
+                    kernel_n *= d
+        mg = re.search(r"feature_group_count=(\d+)", instr.rest)
+        groups = int(mg.group(1)) if mg else 1
+        return 2.0 * out_n * max(kernel_n // max(groups, 1), 1)
+
+    def _group_size(self, instr: Instr) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]", instr.rest)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([^}]*)\}", instr.rest)
+        if m:
+            return len([x for x in m.group(1).split(",") if x.strip()])
+        return 2
+
+    def _collective(self, instr: Instr, cost: CostSummary):
+        kind = instr.op
+        nbytes = _parse_shape_bytes(instr.out_type)
+        g = self._group_size(instr)
+        cost.collective_bytes[kind] = (
+            cost.collective_bytes.get(kind, 0.0) + nbytes)
+        cost.collective_count[kind] = cost.collective_count.get(kind, 0) + 1
+        # Ring-model bytes actually crossing each device's links:
+        if kind == "all-gather":
+            wire = nbytes * (g - 1) / g
+        elif kind == "all-reduce":
+            wire = 2.0 * nbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = nbytes * (g - 1)            # out is the scattered shard
+        elif kind == "all-to-all":
+            wire = nbytes * (g - 1) / g
+        else:  # collective-permute
+            wire = nbytes
+        cost.collective_wire_bytes += wire
+
+    def _called(self, instr: Instr) -> List[Tuple[str, float]]:
+        """(computation, multiplier) pairs invoked by this instruction."""
+        out = []
+        if instr.op == "while":
+            mb = re.search(r"body=%?([\w.\-]+)", instr.rest)
+            mc = re.search(r"condition=%?([\w.\-]+)", instr.rest)
+            mt = re.search(r'known_trip_count[="{\s:]+\{?"?n"?[":\s]+(\d+)',
+                           instr.rest)
+            trips = float(mt.group(1)) if mt else 1.0
+            if mb:
+                out.append((mb.group(1), trips))
+            if mc:
+                out.append((mc.group(1), trips))
+        elif instr.op in ("fusion", "call", "custom-call", "async-start"):
+            m = re.search(r"calls=%?([\w.\-]+)", instr.rest)
+            if m:
+                out.append((m.group(1), 1.0))
+        elif instr.op == "conditional":
+            for m in re.finditer(
+                    r"(?:true_computation|false_computation|branch_computations=\{)[^,}]*%?([\w.\-]+)",
+                    instr.rest):
+                out.append((m.group(1), 1.0))
+        return out
+
+    def computation_cost(self, name: str, top_level: bool) -> CostSummary:
+        key = f"{name}@{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        cost = CostSummary()
+        instrs = self.computations.get(name) or self.computations.get(
+            "ENTRY:" + name, [])
+        for instr in instrs:
+            if instr.op == "dot":
+                cost.flops += self._dot_flops(name, instr)
+            elif instr.op == "convolution":
+                cost.flops += self._conv_flops(name, instr)
+            elif instr.op in COLLECTIVES or any(
+                    instr.op.startswith(c + "-") for c in COLLECTIVES):
+                base = instr.op
+                for c in COLLECTIVES:
+                    if instr.op.startswith(c):
+                        base = c
+                if instr.op.endswith("-done"):
+                    continue
+                inst2 = dataclasses.replace(instr, op=base)
+                self._collective(inst2, cost)
+            # HBM bytes: top-level scheduled instrs move operands+outputs.
+            if top_level and instr.op not in (
+                    "parameter", "constant", "tuple", "get-tuple-element",
+                    "bitcast", "while", "conditional"):
+                nbytes = _parse_shape_bytes(instr.out_type)
+                ops = instr.rest.split(")", 1)[0]
+                for o in ops.split(","):
+                    t = self._lookup(name, o)
+                    nbytes += _parse_shape_bytes(t)
+                cost.hbm_bytes += nbytes
+            for callee, times in self._called(instr):
+                sub_top = top_level and instr.op in ("while", "conditional",
+                                                     "call")
+                cost.add(self.computation_cost(callee, sub_top), times)
+        self._memo[key] = cost
+        return cost
+
+    def entry_cost(self) -> CostSummary:
+        if self.entry is None:
+            return CostSummary()
+        return self.computation_cost(self.entry, top_level=True)
+
+
+def analyze(hlo_text: str) -> CostSummary:
+    return HloModuleCosts(hlo_text).entry_cost()

@@ -1,0 +1,6 @@
+"""Architecture families (pure JAX): dense/MoE/VLM decoders, Mamba2 SSD,
+Zamba2 hybrid, Whisper enc-dec — scan-over-layers, GSPMD-shardable."""
+from repro.models.config import ModelConfig
+from repro.models.model import SHAPES, Model, ShapeSpec, build
+
+__all__ = ["ModelConfig", "Model", "ShapeSpec", "SHAPES", "build"]

@@ -1,0 +1,184 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The audio frontend (mel conv stem) is a STUB per the assignment:
+``input_specs`` feeds precomputed frame embeddings (B, S_enc, d_model).
+Encoder: non-causal self-attention + GELU MLP with sinusoidal positions.
+Decoder: causal self-attention + cross-attention + GELU MLP.
+(RMSNorm replaces LayerNorm and biases are omitted — documented
+simplification; the backbone dimensions match whisper-tiny exactly.)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.attention import causal_attention, decode_attention, repeat_kv
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _init_xattn(key, cfg: ModelConfig, n_layers: int) -> Dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.padded_heads, cfg.n_kv_heads
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], (n_layers, d, hq * dh), dt, in_axis=1),
+        "wk": L.dense_init(ks[1], (n_layers, d, hkv * dh), dt, in_axis=1),
+        "wv": L.dense_init(ks[2], (n_layers, d, hkv * dh), dt, in_axis=1),
+        "wo": L.dense_init(ks[3], (n_layers, hq * dh, d), dt, in_axis=1),
+    }
+
+
+def _init_gelu_mlp(key, cfg: ModelConfig, n_layers: int) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = _dtype(cfg)
+    k1, k2 = jax.random.split(key)
+    return {
+        "wi": L.dense_init(k1, (n_layers, d, f), dt, in_axis=1),
+        "wo": L.dense_init(k2, (n_layers, f, d), dt, in_axis=1),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 10)
+    enc = {
+        "attn": _init_xattn(ks[0], cfg, cfg.n_enc_layers),
+        "mlp": _init_gelu_mlp(ks[1], cfg, cfg.n_enc_layers),
+        "ln1": jnp.ones((cfg.n_enc_layers, d), dt),
+        "ln2": jnp.ones((cfg.n_enc_layers, d), dt),
+    }
+    dec = {
+        "attn": _init_xattn(ks[2], cfg, cfg.n_layers),
+        "xattn": _init_xattn(ks[3], cfg, cfg.n_layers),
+        "mlp": _init_gelu_mlp(ks[4], cfg, cfg.n_layers),
+        "ln1": jnp.ones((cfg.n_layers, d), dt),
+        "lnx": jnp.ones((cfg.n_layers, d), dt),
+        "ln2": jnp.ones((cfg.n_layers, d), dt),
+    }
+    return {
+        "encoder": enc,
+        "decoder": dec,
+        "embed": L.embed_init(ks[5], (v, d), dt),
+        "enc_norm": jnp.ones((d,), dt),
+        "final_norm": jnp.ones((d,), dt),
+        "head": L.dense_init(ks[6], (d, v), dt, in_axis=0),
+    }
+
+
+def _mha(p, cfg, xq, xkv, causal):
+    b, sq, d = xq.shape
+    dh = cfg.head_dim
+    q = jnp.einsum("bsd,dk->bsk", xq, p["wq"]).reshape(
+        b, sq, cfg.padded_heads, dh)
+    k = jnp.einsum("bsd,dk->bsk", xkv, p["wk"]).reshape(
+        b, xkv.shape[1], cfg.n_kv_heads, dh)
+    v = jnp.einsum("bsd,dk->bsk", xkv, p["wv"]).reshape(
+        b, xkv.shape[1], cfg.n_kv_heads, dh)
+    k = repeat_kv(k, cfg.n_rep)
+    v = repeat_kv(v, cfg.n_rep)
+    o = causal_attention(q, k, v, chunk=cfg.attn_chunk, causal=causal)
+    return jnp.einsum("bsk,kd->bsd", o.reshape(b, sq, -1), p["wo"])
+
+
+def encode(params, cfg: ModelConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """frames: (B, S_enc, d) stub embeddings -> encoder hidden."""
+    pos = L.sinusoidal_positions(frames.shape[1], cfg.d_model)
+    x = frames + pos[None].astype(frames.dtype)
+    x = constrain(x, "dp", None, None)
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + _mha(lp["attn"], cfg, h, h, causal=False)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, lp["mlp"]["wi"], lp["mlp"]["wo"])
+        return constrain(x, "dp", None, None), None
+
+    body = T._maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, tokens, enc_hidden) -> jnp.ndarray:
+    x = T.embed(params, cfg, tokens)
+    pos = L.sinusoidal_positions(x.shape[1], cfg.d_model)
+    x = x + pos[None].astype(x.dtype)
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + _mha(lp["attn"], cfg, h, h, causal=True)
+        h = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        x = x + _mha(lp["xattn"], cfg, h, enc_hidden, causal=False)
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, lp["mlp"]["wi"], lp["mlp"]["wo"])
+        return constrain(x, "dp", None, None), None
+
+    body = T._maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    enc_hidden = encode(params, cfg, batch["frames"].astype(_dtype(cfg)))
+    hidden = decode_train(params, cfg, batch["tokens"], enc_hidden)
+    logits = T.logits_fn(params, cfg, hidden)
+    return L.softmax_xent(logits, batch["labels"], cfg.vocab_size)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    dh = cfg.head_dim
+    n, hkv = cfg.n_layers, cfg.n_kv_heads
+    return {
+        "k": jnp.zeros((n, batch, max_len, hkv, dh), dtype),
+        "v": jnp.zeros((n, batch, max_len, hkv, dh), dtype),
+        # Cross-attention K/V are computed once from the encoder output.
+        "xk": jnp.zeros((n, batch, max_len, hkv, dh), dtype),
+        "xv": jnp.zeros((n, batch, max_len, hkv, dh), dtype),
+        "enc_len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len):
+    x = T.embed(params, cfg, tokens)
+    pos = L.sinusoidal_positions(1, cfg.d_model)  # position enc simplified
+    x = x + pos[None].astype(x.dtype)
+    enc_len = cache["enc_len"]
+
+    def body(x, inputs):
+        lp, ck, cv, xk, xv = inputs
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        att, nk, nv = T.attention_decode(lp["attn"], cfg, h, ck, cv, cur_len)
+        x = x + att
+        h = L.rms_norm(x, lp["lnx"], cfg.norm_eps)
+        b = x.shape[0]
+        dh = cfg.head_dim
+        q = jnp.einsum("bsd,dk->bsk", h, lp["xattn"]["wq"]).reshape(
+            b, 1, cfg.padded_heads, dh)
+        o = decode_attention(q, repeat_kv(xk, cfg.n_rep),
+                             repeat_kv(xv, cfg.n_rep), enc_len)
+        x = x + jnp.einsum("bsk,kd->bsd", o.reshape(b, 1, -1),
+                           lp["xattn"]["wo"])
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + L.gelu_mlp(h, lp["mlp"]["wi"], lp["mlp"]["wo"])
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, hidden)
+    new_cache = dict(cache)
+    new_cache["k"] = nk
+    new_cache["v"] = nv
+    return logits, new_cache

@@ -1,0 +1,152 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block
+(arXiv:2411.15242) applied every ``attn_every`` layers.
+
+One set of attention+MLP weights is reused at every application site (the
+Zamba2 parameter-sharing trick); per-site LoRA deltas are omitted
+(documented simplification, DESIGN.md §Arch-applicability).  The layer scan
+carries the shared block application as a ``lax.cond`` keyed on a static
+per-layer flag so the whole stack remains a single while loop.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    shared = {
+        "attn": jax.tree.map(lambda x: x[0],
+                             T.init_attn(ks[0], cfg, 1)),
+        "mlp": jax.tree.map(lambda x: x[0], T.init_mlp(ks[1], cfg, 1)),
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+    }
+    return {
+        "embed": L.embed_init(ks[2], (v, d), dt),
+        "layers": S.init_mamba(ks[3], cfg, cfg.n_layers),
+        "shared": shared,
+        "final_norm": jnp.ones((d,), dt),
+        "head": L.dense_init(ks[4], (d, v), dt, in_axis=0),
+    }
+
+
+def _shared_block(shared, cfg: ModelConfig, x, positions):
+    h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+    x = x + T.attention_block(shared["attn"], cfg, h, positions)
+    h = L.rms_norm(x, shared["ln2"], cfg.norm_eps)
+    x = x + L.swiglu(h, shared["mlp"]["wg"], shared["mlp"]["wu"],
+                     shared["mlp"]["wd"])
+    return x
+
+
+def forward(params, cfg: ModelConfig, x, positions) -> jnp.ndarray:
+    flags = (jnp.arange(cfg.n_layers) % max(cfg.attn_every, 1)) == 0
+    shared = params["shared"]
+
+    def body(x, inputs):
+        lp, flag = inputs
+        x = jax.lax.cond(
+            flag,
+            lambda x: _shared_block(shared, cfg, x, positions),
+            lambda x: x,
+            x)
+        x = S.mamba_block(lp, cfg, x)
+        seq = "model" if cfg.seq_shard_activations else None
+        return constrain(x, "dp", seq, None), None
+
+    body = T._maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, (params["layers"], flags))
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    x = T.embed(params, cfg, batch["tokens"])
+    positions = jnp.arange(x.shape[1])
+    hidden = forward(params, cfg, x, positions)
+    logits = T.logits_fn(params, cfg, hidden)
+    return L.softmax_xent(logits, batch["labels"], cfg.vocab_size)
+
+
+def n_attn_sites(cfg: ModelConfig) -> int:
+    return (cfg.n_layers + cfg.attn_every - 1) // max(cfg.attn_every, 1)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Dict:
+    sites = n_attn_sites(cfg)
+    dh = cfg.head_dim
+    cache = S.init_ssm_cache(cfg, batch, cfg.n_layers)
+    cache["k"] = jnp.zeros(
+        (sites, batch, max_len, cfg.n_kv_heads, dh), dtype)
+    cache["v"] = jnp.zeros(
+        (sites, batch, max_len, cfg.n_kv_heads, dh), dtype)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len):
+    """One-token step: scan over attention sites (shared block + its
+    following mamba sub-stack)."""
+    x = T.embed(params, cfg, tokens)
+    shared = params["shared"]
+    sites = n_attn_sites(cfg)
+    k = cfg.attn_every
+    # Pad the mamba stack so it reshapes to (sites, k, ...) cleanly.
+    pad = sites * k - cfg.n_layers
+
+    def pad_stack(a):
+        if pad == 0:
+            return a
+        cfgpad = jnp.zeros((pad,) + a.shape[1:], a.dtype)
+        return jnp.concatenate([a, cfgpad], axis=0)
+
+    mamba = jax.tree.map(
+        lambda a: pad_stack(a).reshape((sites, k) + a.shape[1:]),
+        params["layers"])
+    conv = pad_stack(cache["conv"]).reshape(
+        (sites, k) + cache["conv"].shape[1:])
+    state = pad_stack(cache["state"]).reshape(
+        (sites, k) + cache["state"].shape[1:])
+    live = (jnp.arange(sites * k) < cfg.n_layers).reshape(sites, k)
+
+    def site_body(x, inputs):
+        sp, conv_s, state_s, ck, cv, live_s = inputs
+        h = L.rms_norm(x, shared["ln1"], cfg.norm_eps)
+        att, nk, nv = T.attention_decode(
+            shared["attn"], cfg, h, ck, cv, cur_len)
+        x = x + att
+        h = L.rms_norm(x, shared["ln2"], cfg.norm_eps)
+        x = x + L.swiglu(h, shared["mlp"]["wg"], shared["mlp"]["wu"],
+                         shared["mlp"]["wd"])
+
+        def mamba_body(x, inner):
+            lp, cs, ss, alive = inner
+            nx, nc, ns = S.mamba_decode(lp, cfg, x, cs, ss)
+            nx = jnp.where(alive, nx, x)
+            return nx, (nc, ns)
+
+        x, (nc, ns) = jax.lax.scan(
+            mamba_body, x, (sp, conv_s, state_s, live_s))
+        return x, (nc, ns, nk, nv)
+
+    x, (nc, ns, nk, nv) = jax.lax.scan(
+        site_body, x, (mamba, conv, state, cache["k"], cache["v"], live))
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, hidden)
+    new_cache = {
+        "conv": nc.reshape((-1,) + nc.shape[2:])[: cfg.n_layers],
+        "state": ns.reshape((-1,) + ns.shape[2:])[: cfg.n_layers],
+        "k": nk,
+        "v": nv,
+    }
+    return logits, new_cache

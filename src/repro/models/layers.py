@@ -1,0 +1,111 @@
+"""Shared model building blocks (pure JAX, functional style).
+
+Parameters are plain pytrees (nested dicts of ``jnp.ndarray``); every init
+function takes an ``nk`` (named key) and returns the subtree.  Compute dtype
+is bf16 with f32 for normalization/softmax statistics (TPU-native policy);
+parameter dtype is configurable (bf16 for the dry-run, f32 for tiny CPU
+smoke training).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """RMSNorm with f32 statistics (Llama/Qwen convention)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def swiglu(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+           wd: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP: down( silu(x @ wg) * (x @ wu) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, wg))
+    u = jnp.einsum("...d,df->...f", x, wu)
+    return jnp.einsum("...f,fd->...d", g * u, wd)
+
+
+def gelu_mlp(x: jnp.ndarray, wi: jnp.ndarray, wo: jnp.ndarray) -> jnp.ndarray:
+    """GELU MLP (whisper-style two-matrix FFN)."""
+    return jnp.einsum("...f,fd->...d", jax.nn.gelu(
+        jnp.einsum("...d,df->...f", x, wi)), wo)
+
+
+def rope_frequencies(head_dim: int, max_pos: int, theta: float = 1e4
+                     ) -> jnp.ndarray:
+    """(max_pos, head_dim/2) complex rotation angles for RoPE."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    t = np.arange(max_pos)
+    freqs = np.outer(t, inv)  # (max_pos, head_dim/2)
+    return jnp.asarray(freqs, dtype=jnp.float32)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, H, Dh); positions: broadcastable (S,)
+    or (..., S)."""
+    dh = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    # angles: (..., S, Dh/2)
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> jnp.ndarray:
+    """Whisper-style sinusoid table (seq, d_model)."""
+    half = d_model // 2
+    scale = np.log(10000.0) / max(half - 1, 1)
+    inv = np.exp(-scale * np.arange(half))
+    pos = np.arange(seq)[:, None] * inv[None, :]
+    return jnp.asarray(
+        np.concatenate([np.sin(pos), np.cos(pos)], axis=1), dtype=jnp.float32)
+
+
+# ------------------------------------------------------------------ #
+# Initializers
+# ------------------------------------------------------------------ #
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jnp.ndarray:
+    """Truncated-normal fan-in init (matches common LM training setups)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    std = 1.0 / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(
+        key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 vocab_size: int) -> jnp.ndarray:
+    """Mean token cross-entropy; labels < 0 are masked.  Padded vocab
+    entries (>= vocab_size) are excluded from the partition function by
+    masking their logits."""
+    v_pad = logits.shape[-1]
+    if v_pad > vocab_size:
+        mask = (jnp.arange(v_pad) < vocab_size)
+        logits = jnp.where(mask, logits, -1e30)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

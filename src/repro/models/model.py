@@ -1,0 +1,152 @@
+"""Model facade: family registry + uniform init/loss/decode interface.
+
+``Model`` wraps a family module with a uniform API consumed by the
+training step builder, the serving engine and the dry-run:
+
+  init(rng)                 -> params pytree
+  loss(params, batch)       -> scalar
+  init_cache(batch, maxlen) -> decode cache pytree
+  decode_step(params, cache, tokens, cur_len) -> (logits, cache)
+  input_specs(shape)        -> {name: ShapeDtypeStruct} for a named shape
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, ssm, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            self._mod = transformer
+        elif fam == "ssm":
+            self._mod = ssm
+        elif fam == "hybrid":
+            self._mod = hybrid
+        elif fam == "encdec":
+            self._mod = encdec
+        else:
+            raise ValueError(f"unknown family {fam}")
+
+    # ---------------- core API ---------------- #
+
+    def init(self, rng) -> Dict:
+        return self._mod.init_params(rng, self.cfg)
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        return self._mod.loss_fn(params, self.cfg, batch)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        if self.cfg.family == "ssm":
+            return ssm.init_ssm_cache(self.cfg, batch, self.cfg.n_layers)
+        return self._mod.init_cache(self.cfg, batch, max_len, dtype)
+
+    def decode_step(self, params, cache, tokens, cur_len):
+        return self._mod.decode_step(params, self.cfg, cache, tokens,
+                                     cur_len)
+
+    def prefill(self, params, batch):
+        """Inference prefill: full-sequence forward, LAST-position logits
+        (the head is never evaluated on earlier positions, as in a real
+        serving engine — XLA DCEs the rest)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            enc = encdec.encode(params, cfg,
+                                batch["frames"].astype(
+                                    jnp.dtype(cfg.param_dtype)))
+            hidden = encdec.decode_train(params, cfg, batch["tokens"], enc)
+            return transformer.logits_fn(params, cfg, hidden[:, -1:, :])
+        if "embeddings" in batch:
+            x = batch["embeddings"].astype(jnp.dtype(cfg.param_dtype))
+        else:
+            x = transformer.embed(params, cfg, batch["tokens"])
+        positions = jnp.arange(x.shape[1])
+        if cfg.family == "hybrid":
+            hidden = hybrid.forward(params, cfg, x, positions)
+        elif cfg.family == "ssm":
+            from repro.distributed import constrain
+            seq = "model" if cfg.seq_shard_activations else None
+            x = constrain(x, "dp", seq, None)
+
+            def body(x, lp):
+                return ssm.mamba_block(lp, cfg, x), None
+            body = transformer._maybe_remat(body, cfg)
+            hidden, _ = jax.lax.scan(body, x, params["layers"])
+            from repro.models import layers as L
+            hidden = L.rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+        else:
+            hidden = transformer.forward(params, cfg, x, positions)
+        return transformer.logits_fn(params, cfg, hidden[:, -1:, :])
+
+    # ---------------- dry-run input specs ---------------- #
+
+    def input_specs(self, shape: str) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        spec = SHAPES[shape] if isinstance(shape, str) else shape
+        cfg = self.cfg
+        b, s = spec.global_batch, spec.seq_len
+        i32 = jnp.int32
+        bf16 = jnp.bfloat16
+        if spec.kind in ("train", "prefill"):
+            if cfg.family == "encdec":
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), bf16),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32),
+                }
+            if cfg.frontend in ("audio", "patch"):
+                return {
+                    "embeddings": jax.ShapeDtypeStruct(
+                        (b, s, cfg.d_model), bf16),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32),
+                }
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+        # decode: one new token against a cache of length seq_len
+        if cfg.frontend in ("audio", "patch") and cfg.family != "encdec":
+            tok = jax.ShapeDtypeStruct((b, 1, cfg.d_model), bf16)
+        else:
+            tok = jax.ShapeDtypeStruct((b, 1), i32)
+        return {"tokens": tok,
+                "cur_len": jax.ShapeDtypeStruct((), i32)}
+
+    def supports_shape(self, shape: str) -> bool:
+        """long_500k requires sub-quadratic sequence mixing (spec policy:
+        run for SSM/hybrid, skip for pure full-attention archs)."""
+        if shape != "long_500k":
+            if shape in ("decode_32k", "long_500k"):
+                return self.cfg.family != "none"
+            return True
+        return self.cfg.family in ("ssm", "hybrid")
+
+
+def build(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,231 @@
+"""Mamba2 (state-space duality / SSD) blocks — arXiv:2405.21060.
+
+The SSD recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t B_t (x) ,
+y_t = C_t . h_t + D x_t  is evaluated with the chunked matmul-form
+algorithm (intra-chunk attention-like block + inter-chunk state
+recurrence), which is what makes it MXU-friendly on TPU.  ``lax.scan``
+runs over chunks (sequential inter-chunk state) and the per-chunk math is
+batched matmuls; on real TPU hardware the per-chunk body is the Pallas
+kernel in ``repro.kernels.ssd_scan`` and this jnp path is its oracle.
+
+Sharding: SSD heads are sharded over the "model" axis (64 heads for
+mamba2-1.3b, 112 for zamba2-7b — both divisible by 16); B/C projections are
+group-shared (n_groups=1) and replicated; the conv is depthwise over the
+head-sharded channel dim, so the whole block is comm-free except the
+in/out projections' boundary collectives.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import constrain
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def init_mamba(key, cfg: ModelConfig, n_layers: int) -> Dict:
+    d, di = cfg.d_model, cfg.d_inner
+    n, h, k = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "wx": L.dense_init(ks[0], (n_layers, d, di), dt, in_axis=1),
+        "wz": L.dense_init(ks[1], (n_layers, d, di), dt, in_axis=1),
+        "wB": L.dense_init(ks[2], (n_layers, d, n), dt, in_axis=1),
+        "wC": L.dense_init(ks[3], (n_layers, d, n), dt, in_axis=1),
+        "wdt": L.dense_init(ks[4], (n_layers, d, h), dt, in_axis=1),
+        "dt_bias": jnp.zeros((n_layers, h), dt),
+        "A_log": jnp.zeros((n_layers, h), jnp.float32),
+        "D": jnp.ones((n_layers, h), dt),
+        "conv": (jax.random.normal(ks[5], (n_layers, di, k), jnp.float32)
+                 * (1.0 / k)).astype(dt),
+        "norm": jnp.ones((n_layers, di), dt),
+        "out": L.dense_init(ks[6], (n_layers, di, d), dt, in_axis=1),
+        "ln": jnp.ones((n_layers, d), dt),
+    }
+
+
+def causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x: (B, S, C); w: (C, K)."""
+    k = w.shape[-1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    # (B, S+K-1, C) -> windows via conv_general_dilated, depthwise.
+    out = jax.lax.conv_general_dilated(
+        xp.transpose(0, 2, 1)[:, :, None, :],            # (B, C, 1, S+K-1)
+        w[:, None, None, :].astype(x.dtype),             # (C, 1, 1, K)
+        window_strides=(1, 1), padding="VALID",
+        feature_group_count=w.shape[0],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return out[:, :, 0, :].transpose(0, 2, 1)            # (B, S, C)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int,
+                initial_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan (pure-jnp oracle).
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,) negative; Bm/Cm: (B, S, N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    cl = min(chunk, s)
+    assert s % cl == 0, (s, cl)
+    nc = s // cl
+
+    xr = x.reshape(b, nc, cl, h, p).astype(jnp.float32)
+    dtr = dt.reshape(b, nc, cl, h).astype(jnp.float32)
+    Br = Bm.reshape(b, nc, cl, n).astype(jnp.float32)
+    Cr = Cm.reshape(b, nc, cl, n).astype(jnp.float32)
+    dA = dtr * A[None, None, None, :]               # (B,nc,cl,H) log-decay
+    cs = jnp.cumsum(dA, axis=2)                     # inclusive cumsum
+
+    xdt = xr * dtr[..., None]                       # dt-weighted inputs
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def chunk_body(state, inputs):
+        xc, dAc, csc, Bc, Cc = inputs  # (B,cl,H,P) (B,cl,H) (B,cl,H) ...
+        # Intra-chunk ("diag block"): M[i,j] = (C_i.B_j) exp(cs_i-cs_j), j<=i
+        G = jnp.einsum("bin,bjn->bij", Cc, Bc)      # (B,cl,cl)
+        decay = jnp.exp(csc[:, :, None, :] - csc[:, None, :, :])  # (B,i,j,H)
+        causal = jnp.tril(jnp.ones((xc.shape[1], xc.shape[1])))
+        M = G[:, :, :, None] * decay * causal[None, :, :, None]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", M, xc)
+        # Contribution of the carried state: exp(cs_i) C_i . state
+        sdec = jnp.exp(csc)                          # (B,cl,H)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Cc, state, sdec)
+        # Next state: chunk-end decay of current + new outer products
+        edec = jnp.exp(csc[:, -1:, :] - csc)         # decay j..end (B,cl,H)
+        new_state = jnp.einsum("bjn,bjhp,bjh->bhpn", Bc, xc, edec)
+        state = (jnp.exp(csc[:, -1, :])[:, :, None, None] * state
+                 + new_state)
+        return state, y_intra + y_inter
+
+    inputs = (
+        xdt.transpose(1, 0, 2, 3, 4),
+        dA.transpose(1, 0, 2, 3),
+        cs.transpose(1, 0, 2, 3),
+        Br.transpose(1, 0, 2, 3),
+        Cr.transpose(1, 0, 2, 3),
+    )
+    final_state, ys = jax.lax.scan(chunk_body, initial_state, inputs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def mamba_block(p, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """One Mamba2 block (train/prefill).  x: (B, S, d)."""
+    b, s, d = x.shape
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    xi = jnp.einsum("bsd,de->bse", h, p["wx"])       # (B,S,di)
+    z = jnp.einsum("bsd,de->bse", h, p["wz"])
+    Bm = jnp.einsum("bsd,dn->bsn", h, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", h, p["wC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", h, p["wdt"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    xi = causal_conv(xi, p["conv"])
+    xi = jax.nn.silu(xi)
+    xi = constrain(xi, "dp", None, "model")
+    hh, pp = cfg.ssm_heads, cfg.ssm_head_dim
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(
+        xi.reshape(b, s, hh, pp), dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xi.reshape(b, s, hh, pp) * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(b, s, cfg.d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"])
+    return x + out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, n_layers: int,
+                   dtype=jnp.float32) -> Dict:
+    return {
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, cfg.d_inner),
+                          dtype),
+        "state": jnp.zeros((n_layers, batch, cfg.ssm_heads,
+                            cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    }
+
+
+def mamba_decode(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One-token Mamba2 step.  x: (B, 1, d).  Returns (out, new_conv,
+    new_state)."""
+    b = x.shape[0]
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)[:, 0]   # (B, d)
+    xi = h @ p["wx"]
+    z = h @ p["wz"]
+    Bm = (h @ p["wB"]).astype(jnp.float32)           # (B, N)
+    Cm = (h @ p["wC"]).astype(jnp.float32)
+    dt = jax.nn.softplus((h @ p["wdt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B, H)
+    # conv ring: conv_state (B, K-1, di) holds the previous inputs.
+    window = jnp.concatenate(
+        [conv_state, xi[:, None, :].astype(conv_state.dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,ck->bc", window, p["conv"].astype(jnp.float32))
+    new_conv = window[:, 1:, :]
+    xi = jax.nn.silu(conv_out)                       # (B, di)
+    hh, pp = cfg.ssm_heads, cfg.ssm_head_dim
+    xh = xi.reshape(b, hh, pp).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A[None, :])                 # (B, H)
+    new_state = (decay[:, :, None, None] * ssm_state
+                 + jnp.einsum("bhp,bn,bh->bhpn", xh, Bm, dt))
+    y = jnp.einsum("bn,bhpn->bhp", Cm, new_state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, cfg.d_inner).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out"])[:, None, :]                 # (B, 1, d)
+    return x + out, new_conv, new_state
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    from repro.models import transformer as T
+    x = T.embed(params, cfg, batch["tokens"])
+    seq = "model" if cfg.seq_shard_activations else None
+    x = constrain(x, "dp", seq, None)
+
+    def body(x, lp):
+        return mamba_block(lp, cfg, x), None
+
+    body = T._maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, x)
+    return L.softmax_xent(logits, batch["labels"], cfg.vocab_size)
+
+
+def init_params(key, cfg: ModelConfig) -> Dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": L.embed_init(ks[0], (v, d), dt),
+        "layers": init_mamba(ks[1], cfg, cfg.n_layers),
+        "final_norm": jnp.ones((d,), dt),
+        "head": L.dense_init(ks[2], (d, v), dt, in_axis=0),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, cur_len):
+    from repro.models import transformer as T
+    x = T.embed(params, cfg, tokens)
+
+    def body(x, lp_cache):
+        lp, cs, ss = lp_cache
+        x, nc, ns = mamba_decode(lp, cfg, x, cs, ss)
+        return x, (nc, ns)
+
+    x, (nc, ns) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["state"]))
+    hidden = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = T.logits_fn(params, cfg, hidden)
+    return logits, {"conv": nc, "state": ns}

@@ -1,0 +1,15 @@
+from repro.optim.optimizers import (
+    OptState,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+)
+from repro.optim.grad_compress import compress_grads, decompress_grads
+
+__all__ = [
+    "OptState", "adamw_init", "adamw_update", "adafactor_init",
+    "adafactor_update", "make_optimizer", "compress_grads",
+    "decompress_grads",
+]

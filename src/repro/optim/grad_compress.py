@@ -1,0 +1,41 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for DP sync over slow links, e.g. the multi-pod DCN axis).
+
+Gradients are quantized per-tensor to int8 with an f32 scale before the
+data-parallel reduction; the quantization error is carried in an error-
+feedback accumulator so the compression is unbiased over time (1-bit
+Adam-style).  4x fewer bytes on the wire for the gradient all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads, error_feedback=None) -> Tuple[Any, Any, Any]:
+    """Returns (q_grads int8, scales f32, new_error_feedback)."""
+    if error_feedback is None:
+        error_feedback = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        err = g - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    flat, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error_feedback)
+    out = [one(g, e) for g, e in zip(flat, flat_e)]
+    q = tdef.unflatten([o[0] for o in out])
+    scales = tdef.unflatten([o[1] for o in out])
+    err = tdef.unflatten([o[2] for o in out])
+    return q, scales, err
+
+
+def decompress_grads(q_grads, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, q_grads, scales)

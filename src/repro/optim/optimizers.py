@@ -1,0 +1,162 @@
+"""Optimizers (from scratch, pytree-native): AdamW and Adafactor.
+
+Policy: parameters are stored/computed in their model dtype (bf16 for
+production configs) with an f32 master copy inside the optimizer state;
+AdamW keeps f32 first/second moments (3x f32 per param), Adafactor keeps a
+factored second moment (rows+cols) for matrices — the right choice for the
+300B-class configs where full AdamW state would not fit a v5e pod
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    master: Any          # f32 params
+    m: Any               # adamw: f32 momentum | adafactor: f32 momentum/None
+    v: Any               # adamw: f32 second moment | adafactor: (vr, vc, vfull)
+
+
+# ----------------------------- AdamW ------------------------------- #
+
+
+def adamw_init(params) -> OptState:
+    # copy=True: with f32 params, astype would alias the param buffer and
+    # break double-donation of (params, opt_state) in the train step.
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(params, grads, state: OptState, *, lr: float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1,
+                 grad_clip: float = 1.0) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(master, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh = m / (1 - b1 ** step)
+        vh = v / (1 - b2 ** step)
+        master = master - lr * (mh / (jnp.sqrt(vh) + eps)
+                                + weight_decay * master)
+        return master, m, v
+
+    flat_p, tdef = jax.tree.flatten(state.master)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    master = tdef.unflatten([o[0] for o in out])
+    m = tdef.unflatten([o[1] for o in out])
+    v = tdef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(
+        lambda mp, p: mp.astype(p.dtype), master, params)
+    return new_params, OptState(step, master, m, v)
+
+
+# --------------------------- Adafactor ----------------------------- #
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params) -> OptState:
+    def second_moment(p):
+        if _factored(p.shape):
+            vr = jnp.zeros(p.shape[:-1], jnp.float32)           # row
+            vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return (vr, vc)
+        return (jnp.zeros(p.shape, jnp.float32),)
+
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        master=jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+        m=None,
+        v=jax.tree.map(second_moment, params,
+                       is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+    )
+
+
+def adafactor_update(params, grads, state: OptState, *, lr: float,
+                     decay: float = 0.8, eps: float = 1e-30,
+                     clip_threshold: float = 1.0,
+                     weight_decay: float = 0.0) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    beta2 = 1.0 - jnp.power(step.astype(jnp.float32), -decay)
+
+    def upd(master, g, v):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if len(v) == 2:
+            vr, vc = v
+            vr = beta2 * vr + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * vc + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                + eps)
+            cfac = jax.lax.rsqrt(vc + eps)
+            u = g * rfac[..., None] * cfac[..., None, :]
+            newv = (vr, vc)
+        else:
+            (vf,) = v
+            vf = beta2 * vf + (1 - beta2) * g2
+            u = g * jax.lax.rsqrt(vf + eps)
+            newv = (vf,)
+        # update clipping by RMS
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip_threshold)
+        master = master - lr * (u + weight_decay * master)
+        return master, newv
+
+    is_v = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, jnp.ndarray) for e in x)
+    flat_p, tdef = jax.tree.flatten(state.master)
+    flat_g = jax.tree.leaves(grads)
+    flat_v, _ = jax.tree.flatten(state.v, is_leaf=is_v)
+    out = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+    master = tdef.unflatten([o[0] for o in out])
+    v = tdef.unflatten([o[1] for o in out])
+    new_params = jax.tree.map(
+        lambda mp, p: mp.astype(p.dtype), master, params)
+    return new_params, OptState(step, master, None, v)
+
+
+# ----------------------------- factory ----------------------------- #
+
+
+def make_optimizer(kind: str, lr: float = 3e-4, **kw):
+    """Returns (init_fn, update_fn(params, grads, state) -> (params, state))."""
+    if kind == "adamw":
+        return adamw_init, lambda p, g, s: adamw_update(p, g, s, lr=lr, **kw)
+    if kind == "adafactor":
+        return adafactor_init, lambda p, g, s: adafactor_update(
+            p, g, s, lr=lr, **kw)
+    if kind == "sgd":
+        init = lambda params: OptState(
+            jnp.zeros((), jnp.int32), None, None, None)
+        upd = lambda p, g, s: (
+            jax.tree.map(lambda pp, gg: pp - lr * gg.astype(pp.dtype), p, g),
+            OptState(s.step + 1, None, None, None))
+        return init, upd
+    raise ValueError(kind)

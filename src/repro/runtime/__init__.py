@@ -1,0 +1,7 @@
+from repro.runtime.cbp_runtime import TrainingPlant, plan_matmul_blocks
+from repro.runtime.fault import ElasticMesh, StragglerWatchdog, factorize_mesh
+
+__all__ = [
+    "TrainingPlant", "plan_matmul_blocks", "ElasticMesh",
+    "StragglerWatchdog", "factorize_mesh",
+]

@@ -1,0 +1,133 @@
+"""CBP runtime binding: the paper's coordinator driving TPU-substrate knobs.
+
+:class:`TrainingPlant` adapts a (train loop + input pipeline + checkpoint
+writer) into the :class:`repro.core.coordinator.Plant` protocol so the
+UNMODIFIED CBPCoordinator manages it:
+
+  clients            = competing memory-system streams
+                       {0: input pipeline, 1: checkpoint writer,
+                        2..: compute streams}
+  cache units        = host staging-buffer pages (pipeline depth x batch)
+  bandwidth          = host<->device/DCN bandwidth shares (MB/s)
+  prefetch           = pipeline prefetch depth on/off
+
+:func:`plan_matmul_blocks` is the kernel-level binding: it runs the UCP
+Lookahead allocator over *tile-utility curves* (arithmetic-intensity gain
+as a function of VMEM bytes given to each operand tile) to choose
+(block_m, block_n, block_k) for ``repro.kernels.cbp_matmul`` under a VMEM
+budget — cache partitioning at the VMEM level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cache_controller import lookahead_allocate
+from repro.core.types import Allocation, IntervalStats
+
+VMEM_BYTES = 128 * 1024 * 1024   # v5e VMEM per core (order of magnitude)
+
+
+# ------------------------------------------------------------------ #
+# Kernel-level binding: VMEM partitioning for cbp_matmul
+# ------------------------------------------------------------------ #
+
+
+def _tile_utility_curves(m: int, n: int, k: int, dtype_bytes: int,
+                         unit_bytes: int, total_units: int) -> np.ndarray:
+    """Utility of giving VMEM units to (A-tile, B-tile, ACC) for a
+    (m x k) @ (k x n) matmul: utility = HBM traffic avoided.
+
+    Bigger block_m (A rows resident) divides B-panel re-reads; bigger
+    block_n divides A re-reads; bigger block_k amortizes accumulator
+    spills.  Concave in each — exactly the miss-curve shape UCP expects.
+    """
+    units = np.arange(total_units + 1, dtype=np.float64)
+    vm = units * unit_bytes
+    # A-tile: block_m ~ vm / (2*block_k*dtype); traffic_B ~ n*k*(m/block_m)
+    bm = np.maximum(vm / (2 * 128 * dtype_bytes), 8)
+    util_a = n * k * dtype_bytes * (m / 8.0 - m / bm)
+    bn = np.maximum(vm / (2 * 128 * dtype_bytes), 8)
+    util_b = m * k * dtype_bytes * (n / 8.0 - n / bn)
+    bk = np.maximum(vm / ((128 + 128) * dtype_bytes), 8)
+    util_acc = m * n * 4.0 * (k / 8.0 - k / bk)
+    return np.stack([util_a, util_b, util_acc])
+
+
+def plan_matmul_blocks(m: int, n: int, k: int, *, dtype_bytes: int = 2,
+                       vmem_budget: int = VMEM_BYTES // 8
+                       ) -> Tuple[int, int, int]:
+    """UCP-allocate the VMEM budget among A/B/ACC tiles -> block sizes."""
+    unit = 8192                                   # 8 KiB VMEM "ways"
+    total_units = max(vmem_budget // unit, 6)
+    curves = _tile_utility_curves(m, n, k, dtype_bytes, unit, total_units)
+    alloc = lookahead_allocate(curves, total_units, min_units=2)
+
+    def _pow2_clamp(x, lo, hi):
+        p = 2 ** int(np.floor(np.log2(max(x, 1))))
+        return int(min(max(p, lo), hi))
+
+    block_m = _pow2_clamp(alloc[0] * unit / (2 * 128 * dtype_bytes), 8, m)
+    block_n = _pow2_clamp(alloc[1] * unit / (2 * 128 * dtype_bytes), 8, n)
+    block_k = _pow2_clamp(alloc[2] * unit / (256 * dtype_bytes), 8, k)
+    # hardware alignment: MXU wants multiples of 128 when possible
+    if m >= 128:
+        block_m = max(block_m, 128) if block_m >= 64 else block_m
+    if n >= 128:
+        block_n = max(block_n, 128) if block_n >= 64 else block_n
+    while m % block_m:
+        block_m //= 2
+    while n % block_n:
+        block_n //= 2
+    while k % block_k:
+        block_k //= 2
+    return max(block_m, 1), max(block_n, 1), max(block_k, 1)
+
+
+# ------------------------------------------------------------------ #
+# Training-loop binding
+# ------------------------------------------------------------------ #
+
+
+@dataclasses.dataclass
+class StreamKnobs:
+    """What the plant applies to each client before an interval."""
+
+    buffer_units: np.ndarray      # cache partition (staging pages)
+    bandwidth_mbps: np.ndarray    # host-side bandwidth shares
+    prefetch_on: np.ndarray
+
+
+class TrainingPlant:
+    """Adapts (pipeline, checkpointer, step_fn) to the CBP Plant protocol.
+
+    ``step_fn(interval_ms, knobs)`` must run the training loop for the
+    interval under the given knobs and return per-client
+    (throughput, queue_wait_ms, buffer_utility_curves).
+    """
+
+    def __init__(self, n_clients: int, total_buffer_units: int,
+                 total_bandwidth_mbps: float,
+                 step_fn: Callable[[float, StreamKnobs],
+                                   Tuple[np.ndarray, np.ndarray,
+                                         np.ndarray]]):
+        self.n_clients = n_clients
+        self.total_cache_units = total_buffer_units
+        self.total_bandwidth = total_bandwidth_mbps
+        self._step_fn = step_fn
+
+    def run_interval(self, alloc: Allocation,
+                     duration_ms: float) -> IntervalStats:
+        knobs = StreamKnobs(
+            buffer_units=alloc.cache_units,
+            bandwidth_mbps=alloc.bandwidth,
+            prefetch_on=alloc.prefetch_on,
+        )
+        throughput, wait_ms, curves = self._step_fn(duration_ms, knobs)
+        return IntervalStats(
+            ipc=np.asarray(throughput, dtype=np.float64),
+            queuing_delay_ns=np.asarray(wait_ms, dtype=np.float64) * 1e6,
+            utility_curves=np.asarray(curves, dtype=np.float64),
+        )

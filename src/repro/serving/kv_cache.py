@@ -1,0 +1,101 @@
+"""Paged KV-cache pool with CBP cache partitioning (DESIGN.md §2).
+
+The HBM KV-page pool is the serving analogue of the paper's shared LLC:
+concurrent request streams (tenants) contend for pages; prefix/context
+reuse means a stream's hit rate is a concave function of its page
+allocation — exactly a miss-ratio curve.  Each stream owns a
+:class:`StackDistanceMonitor` (the software ATD), and the pool reallocates
+partitions with UCP/Lookahead every reconfiguration interval, with the
+same ``min_units`` floor and counter halving as the paper's cache
+controller.
+
+Pages within a stream's partition are managed LRU; exceeding the partition
+evicts that stream's own LRU page (no cross-stream interference once
+partitioned — enforcement).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Hashable, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.atd import StackDistanceMonitor
+from repro.core.cache_controller import lookahead_allocate
+
+
+@dataclasses.dataclass
+class StreamStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PagedKVPool:
+    """Fixed pool of KV pages partitioned across streams by CBP."""
+
+    def __init__(self, total_pages: int, n_streams: int,
+                 min_pages: int = 2):
+        if min_pages * n_streams > total_pages:
+            raise ValueError("pool too small for min_pages floor")
+        self.total_pages = total_pages
+        self.n_streams = n_streams
+        self.min_pages = min_pages
+        self.partition = np.full(n_streams, total_pages // n_streams,
+                                 dtype=np.int64)
+        self.partition[: total_pages - int(self.partition.sum())] += 1
+        self._resident: List[OrderedDict] = [OrderedDict()
+                                             for _ in range(n_streams)]
+        self.monitors = [StackDistanceMonitor(total_pages)
+                         for _ in range(n_streams)]
+        self.stats = [StreamStats() for _ in range(n_streams)]
+
+    # ---------------- access path ---------------- #
+
+    def access(self, stream: int, page_key: Hashable) -> bool:
+        """Touch a page; returns True on hit.  Misses insert the page,
+        evicting the stream's LRU page when over partition."""
+        self.monitors[stream].access(page_key)
+        res = self._resident[stream]
+        hit = page_key in res
+        if hit:
+            res.move_to_end(page_key)
+            self.stats[stream].hits += 1
+        else:
+            self.stats[stream].misses += 1
+            res[page_key] = True
+        self._enforce(stream)
+        return hit
+
+    def _enforce(self, stream: int) -> None:
+        res = self._resident[stream]
+        limit = int(self.partition[stream])
+        while len(res) > limit:
+            res.popitem(last=False)
+            self.stats[stream].evictions += 1
+
+    # ---------------- CBP cache controller ---------------- #
+
+    def utility_curves(self) -> np.ndarray:
+        return np.stack([m.utility_curve() for m in self.monitors])
+
+    def reconfigure(self) -> np.ndarray:
+        """UCP/Lookahead over the measured stack-distance curves
+        (paper §3.2.1), then halve the ATD counters (paper §3.3)."""
+        curves = self.utility_curves()
+        self.partition = lookahead_allocate(
+            curves, self.total_pages, self.min_pages)
+        for m in self.monitors:
+            m.halve()
+        for s in range(self.n_streams):
+            self._enforce(s)
+        return self.partition
+
+    def occupancy(self) -> np.ndarray:
+        return np.array([len(r) for r in self._resident])

@@ -1,0 +1,29 @@
+"""16-core CMP evaluation substrate for the faithful CBP reproduction.
+
+Interval performance model (paper §4 methodology) + the ten Table-3
+resource-manager configurations + the paper's workloads.
+"""
+from repro.sim.apps import (
+    APP_NAMES,
+    BASELINE_BW_GBPS,
+    BASELINE_UNITS,
+    MIN_UNITS,
+    PROFILES,
+    TOTAL_BW_GBPS,
+    TOTAL_UNITS_8MB,
+    AppArrays,
+    stack,
+)
+from repro.sim.managers import MANAGER_NAMES, ManagerResult, run_all_managers, run_manager
+from repro.sim.memsys import SteadyState, evaluate, mpki_curve, utility_curves
+from repro.sim.runner import CMPConfig, CMPPlant, antt, baseline_ipc, weighted_speedup
+from repro.sim.workloads import WORKLOADS, random_workloads
+
+__all__ = [
+    "APP_NAMES", "BASELINE_BW_GBPS", "BASELINE_UNITS", "MIN_UNITS",
+    "PROFILES", "TOTAL_BW_GBPS", "TOTAL_UNITS_8MB", "AppArrays", "stack",
+    "MANAGER_NAMES", "ManagerResult", "run_all_managers", "run_manager",
+    "SteadyState", "evaluate", "mpki_curve", "utility_curves",
+    "CMPConfig", "CMPPlant", "antt", "baseline_ipc", "weighted_speedup",
+    "WORKLOADS", "random_workloads",
+]

@@ -1,0 +1,114 @@
+"""Single-application characterization (paper §2.1, Fig. 2-4).
+
+Reproduces the paper's sensitivity study: one application on one core, with
+baseline allocation 512 kB / 4 GB/s, prefetch off; perturb one resource at a
+time and classify:
+
+  C-L: cache ->128 kB     C-H: cache ->2 MB
+  B-L: bandwidth ->1 GB/s B-H: bandwidth ->16 GB/s
+  P-B: prefetch on at baseline allocation
+
+An application is cache/bandwidth/prefetch *sensitive* if any corresponding
+perturbation moves IPC by >= 10% (paper: "10% deviation from the baseline
+IPC"; prefetch slowdowns also count as sensitivity to throttling, since
+disabling the prefetcher is the profitable action for them).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.sim import apps as apps_mod
+from repro.sim import memsys
+from repro.sim.apps import APP_NAMES, stack
+
+SENSITIVITY_THRESHOLD = 0.10
+
+# Single-app allocation points (units of 32 kB, GB/s).
+BASE = (16, 4.0)     # 512 kB, 4 GB/s
+C_L, C_H = 4, 64     # 128 kB, 2 MB
+B_L, B_H = 1.0, 16.0
+
+
+def _ipc(app: str, units: float, bw: float, pf: bool) -> float:
+    arr = stack([app])
+    ss = memsys.evaluate(
+        arr, np.array([units], dtype=np.float64), np.array([bw]),
+        np.array([pf]), cache_partitioned=True, bandwidth_partitioned=True)
+    return float(ss.ipc[0])
+
+
+def sensitivity_table() -> Dict[str, Dict[str, float]]:
+    """Relative IPC change for every perturbation, per app (Fig. 2 data)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for app in APP_NAMES:
+        base = _ipc(app, *BASE, pf=False)
+        out[app] = {
+            "base_ipc": base,
+            "C-L": _ipc(app, C_L, BASE[1], False) / base - 1.0,
+            "C-H": _ipc(app, C_H, BASE[1], False) / base - 1.0,
+            "B-L": _ipc(app, BASE[0], B_L, False) / base - 1.0,
+            "B-H": _ipc(app, BASE[0], B_H, False) / base - 1.0,
+            "P-B": _ipc(app, *BASE, pf=True) / base - 1.0,
+        }
+    return out
+
+
+def classify(row: Dict[str, float]) -> str:
+    cs = (abs(row["C-L"]) >= SENSITIVITY_THRESHOLD
+          or abs(row["C-H"]) >= SENSITIVITY_THRESHOLD)
+    bs = (abs(row["B-L"]) >= SENSITIVITY_THRESHOLD
+          or abs(row["B-H"]) >= SENSITIVITY_THRESHOLD)
+    # Paper §2.1: the PS class counts applications that are "sensitive to
+    # prefetching and experience a speedup"; prefetch-averse applications
+    # (e.g. xalancbmk) are handled by throttling but not labelled PS.
+    ps = row["P-B"] >= SENSITIVITY_THRESHOLD
+    tags = [t for t, on in (("CS", cs), ("BS", bs), ("PS", ps)) if on]
+    return "-".join(tags) if tags else "I"
+
+
+def classify_all() -> Dict[str, str]:
+    return {app: classify(row) for app, row in sensitivity_table().items()}
+
+
+def prefetch_vs_allocation(app: str) -> Dict[str, float]:
+    """Fig. 3: prefetch speedup at L/B/H allocation scenarios."""
+    res = {}
+    for tag, (units, bw) in {
+        "P-L": (C_L, B_L), "P-B": BASE, "P-H": (C_H, B_H),
+    }.items():
+        off = _ipc(app, units, bw, False)
+        on = _ipc(app, units, bw, True)
+        res[tag] = on / off - 1.0
+    return res
+
+
+def leslie3d_interactions() -> Dict[str, object]:
+    """Fig. 4: pairwise interaction curves for leslie3d."""
+    app = "leslie3d"
+    bw_points = [1.0, 2.0, 4.0, 8.0, 16.0]
+    cache_points = [4, 8, 16, 32, 64]
+    fig4a = {  # IPC vs bandwidth, pf on/off (cache at baseline)
+        "bw": bw_points,
+        "off": [_ipc(app, BASE[0], b, False) for b in bw_points],
+        "on": [_ipc(app, BASE[0], b, True) for b in bw_points],
+    }
+    fig4b = {  # prefetch speedup vs cache allocation (bw at baseline)
+        "cache": cache_points,
+        "speedup": [
+            _ipc(app, c, BASE[1], True) / _ipc(app, c, BASE[1], False)
+            for c in cache_points],
+    }
+    fig4c = {  # IPC vs cache allocation, pf on/off
+        "cache": cache_points,
+        "off": [_ipc(app, c, BASE[1], False) for c in cache_points],
+        "on": [_ipc(app, c, BASE[1], True) for c in cache_points],
+    }
+    fig4d = {  # gain from 512kB->2MB vs bandwidth allocation
+        "bw": bw_points,
+        "gain": [
+            _ipc(app, C_H, b, False) / _ipc(app, BASE[0], b, False) - 1.0
+            for b in bw_points],
+    }
+    return {"fig4a": fig4a, "fig4b": fig4b, "fig4c": fig4c, "fig4d": fig4d}

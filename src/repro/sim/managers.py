@@ -1,0 +1,145 @@
+"""The ten resource-manager configurations of paper Table 3.
+
+Every manager runs on the same :class:`~repro.sim.runner.CMPPlant`; the
+subset managers reuse the CBP coordinator with the unmanaged resources
+pinned, exactly mirroring how the paper builds its comparison points.
+CPpf [Xiao et al. '19] is implemented per paper §4.4: prefetch-friendly
+applications receive the minimum partition; UCP partitions the remaining
+capacity among the rest; prefetching enabled; bandwidth unpartitioned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import (
+    Allocation,
+    CBPCoordinator,
+    CBPParams,
+    Mode,
+    PrefetchMode,
+    lookahead_allocate,
+    throttle_decision,
+)
+from repro.core.atd import SampledATD
+from repro.sim.runner import CMPPlant
+
+MANAGER_NAMES = [
+    "baseline", "equal off", "only cache", "only bw", "only pref",
+    "bw+pref", "bw+cache", "cache+pref", "CPpf", "CBP",
+]
+
+# (cache_mode, bandwidth_mode, prefetch_mode) per Table 3.
+_TABLE3 = {
+    "baseline":   (Mode.UNPARTITIONED, Mode.UNPARTITIONED, PrefetchMode.OFF),
+    "equal off":  (Mode.EQUAL,         Mode.EQUAL,         PrefetchMode.OFF),
+    "equal on":   (Mode.EQUAL,         Mode.EQUAL,         PrefetchMode.ON),
+    "only cache": (Mode.DYNAMIC,       Mode.UNPARTITIONED, PrefetchMode.OFF),
+    "only bw":    (Mode.UNPARTITIONED, Mode.DYNAMIC,       PrefetchMode.OFF),
+    "only pref":  (Mode.UNPARTITIONED, Mode.UNPARTITIONED, PrefetchMode.DYNAMIC),
+    "bw+pref":    (Mode.UNPARTITIONED, Mode.DYNAMIC,       PrefetchMode.DYNAMIC),
+    "bw+cache":   (Mode.DYNAMIC,       Mode.DYNAMIC,       PrefetchMode.OFF),
+    "cache+pref": (Mode.DYNAMIC,       Mode.UNPARTITIONED, PrefetchMode.DYNAMIC),
+    "CBP":        (Mode.DYNAMIC,       Mode.DYNAMIC,       PrefetchMode.DYNAMIC),
+}
+
+
+@dataclasses.dataclass
+class ManagerResult:
+    name: str
+    ipc: np.ndarray                 # time-weighted mean per-app IPC
+    final_alloc: Optional[Allocation] = None
+
+
+def run_manager(
+    name: str,
+    plant: CMPPlant,
+    total_ms: float = 100.0,
+    params: Optional[CBPParams] = None,
+) -> ManagerResult:
+    params = params or CBPParams()
+    if name == "CPpf":
+        return _run_cppf(plant, total_ms, params)
+    cache_mode, bw_mode, pf_mode = _TABLE3[name]
+    coord = CBPCoordinator(
+        plant, params=params,
+        cache_mode=cache_mode, bandwidth_mode=bw_mode, prefetch_mode=pf_mode)
+    coord.run(total_ms)
+    return ManagerResult(name=name, ipc=coord.mean_ipc(),
+                         final_alloc=coord.alloc)
+
+
+def _run_cppf(plant: CMPPlant, total_ms: float,
+              params: CBPParams) -> ManagerResult:
+    """CPpf: prefetch-aware LLC partitioning (paper §4.4 implementation).
+
+    Prefetch-friendly apps -> min allocation (prefetching offsets the small
+    partition); UCP over the remaining capacity for the others; bandwidth
+    unpartitioned; prefetching enabled.
+    """
+    n = plant.n_clients
+    total_units = plant.total_cache_units
+    atd = SampledATD(n, total_units)
+
+    equal_units = np.full(n, total_units // n, dtype=np.int64)
+    bw = np.full(n, plant.total_bandwidth / n)
+
+    def make_alloc(units: np.ndarray, pf_on: np.ndarray) -> Allocation:
+        return Allocation(
+            cache_units=units, bandwidth=bw.copy(), prefetch_on=pf_on,
+            cache_mode=Mode.DYNAMIC, bandwidth_mode=Mode.UNPARTITIONED)
+
+    # Friendliness probe (A/B sample at equal partitioning).
+    off = plant.run_interval(
+        make_alloc(equal_units, np.zeros(n, dtype=bool)),
+        params.prefetch_sampling_period_ms)
+    on = plant.run_interval(
+        make_alloc(equal_units, np.ones(n, dtype=bool)),
+        params.prefetch_sampling_period_ms)
+    friendly = throttle_decision(on.ipc, off.ipc, params.speedup_threshold)
+
+    pf_on = np.ones(n, dtype=bool)  # Table 3: prefetch setting "enabled"
+    units = equal_units.copy()
+    t = 0.0
+    ipc_acc = np.zeros(n)
+    w_acc = 0.0
+    while t < total_ms - 1e-9:
+        dt = min(params.reconfiguration_interval_ms, total_ms - t)
+        stats = plant.run_interval(make_alloc(units, pf_on), dt)
+        atd.record(stats.utility_curves * dt)
+        ipc_acc += stats.ipc * dt
+        w_acc += dt
+        t += dt
+        # Reallocate: friendly pinned at min; UCP for the rest over the
+        # remaining capacity.
+        curves = atd.utility_curves()
+        atd.halve()
+        others = np.where(~friendly)[0]
+        units = np.full(n, params.min_ways, dtype=np.int64)
+        remaining = total_units - params.min_ways * int(friendly.sum())
+        if len(others) > 0:
+            sub = lookahead_allocate(
+                curves[others][:, : remaining + 1], remaining,
+                params.min_ways)
+            units[others] = sub
+        else:
+            units += (total_units - int(units.sum())) // n
+    return ManagerResult(
+        name="CPpf", ipc=ipc_acc / w_acc,
+        final_alloc=make_alloc(units, pf_on))
+
+
+def run_all_managers(
+    workload: Sequence[str],
+    total_ms: float = 100.0,
+    names: Optional[List[str]] = None,
+    params: Optional[CBPParams] = None,
+    config=None,
+) -> Dict[str, ManagerResult]:
+    plant = CMPPlant(workload, config)
+    return {
+        name: run_manager(name, plant, total_ms, params)
+        for name in (names or MANAGER_NAMES)
+    }

@@ -1,0 +1,3 @@
+from repro.train.step import TrainStepConfig, build_train_step
+
+__all__ = ["TrainStepConfig", "build_train_step"]

@@ -1,0 +1,85 @@
+"""Pipeline parallelism over the "pod" mesh axis (DESIGN.md §4).
+
+GPipe-style microbatched pipeline built with ``shard_map`` + ``ppermute``:
+stage s (= pod s) holds layers [s*L/S, (s+1)*L/S); activations flow
+stage-to-stage over the (slow, DCN-like) pod axis while each stage's inner
+layers run under the usual GSPMD TP/DP sharding.  This is the multi-pod
+layout that trades the pod-axis DP gradient all-reduce for S-1 activation
+hops per microbatch — the right trade when inter-pod bandwidth is the
+scarce resource (the CBP bandwidth controller's signal decides which
+layout a deployment uses).
+
+The schedule is the classic jax ppermute pipeline: time t processes
+microbatch (t - stage) at each stage; the loop runs n_micro + n_stages - 1
+ticks.  jax AD differentiates through the ppermute loop, so the same
+function serves training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(
+    stage_fn: Callable,      # (stage_params, x) -> x
+    stage_params,            # pytree, leading dim = n_stages (sharded "pod")
+    x: jnp.ndarray,          # (n_micro, mb, ...) microbatched input
+    mesh,
+    axis: str = "pod",
+) -> jnp.ndarray:
+    """Run the stage pipeline; returns outputs (n_micro, mb, ...)."""
+    n_stages = mesh.shape[axis]
+
+    def worker(params, xs):
+        # params: (1, ...) this stage's slice; xs: (n_micro, mb, ...) —
+        # every stage receives the full microbatch stream but only stage 0
+        # consumes it (others take the ppermute input).
+        params = jax.tree.map(lambda a: a[0], params)
+        stage = jax.lax.axis_index(axis)
+        n_micro = xs.shape[0]
+        ticks = n_micro + n_stages - 1
+        state = jnp.zeros_like(xs[0])          # in-flight activation
+        outs = jnp.zeros_like(xs)
+
+        def tick(carry, t):
+            state, outs = carry
+            mb_in = t                           # microbatch entering stage 0
+            inp = jnp.where(
+                stage == 0,
+                xs[jnp.clip(mb_in, 0, n_micro - 1)],
+                state)
+            out = stage_fn(params, inp)
+            # pass to the next stage (ring; last->0 result is ignored)
+            nxt = jax.lax.ppermute(
+                out, axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            # last stage writes its finished microbatch t - (S - 1)
+            mb_done = t - (n_stages - 1)
+            write = jnp.logical_and(stage == n_stages - 1, mb_done >= 0)
+            outs = jnp.where(
+                write,
+                outs.at[jnp.clip(mb_done, 0, n_micro - 1)].set(out),
+                outs)
+            return (nxt, outs), None
+
+        (state, outs), _ = jax.lax.scan(
+            tick, (state, outs), jnp.arange(ticks))
+        # broadcast final outputs from the last stage to everyone so the
+        # loss is computed replicated across pods (masked psum = one-to-all
+        # broadcast; ppermute requires a true permutation).
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, 0.0), axis)
+        return outs
+
+    in_specs = (
+        jax.tree.map(lambda _: P(axis), stage_params),
+        P(),          # microbatch stream replicated across stages
+    )
+    fn = jax.shard_map(
+        worker, mesh=mesh, in_specs=in_specs, out_specs=P(),
+        check_vma=False)
+    return fn(stage_params, x)

@@ -1,0 +1,75 @@
+"""Train-step builder: loss -> grads (optionally microbatched) -> optimizer.
+
+The returned function is pure (params, opt_state, batch) ->
+(params, opt_state, metrics) and is jit/pjit-compatible; the launcher
+attaches shardings.  Gradient accumulation splits the global batch into
+``microbatches`` scanned slices (the activation-memory lever alongside
+remat and sequence-sharded activations — DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.optimizers import make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    microbatches: int = 1
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def build_train_step(model: Model, tcfg: TrainStepConfig
+                     ) -> Tuple[Callable, Callable]:
+    """Returns (init_opt_state, train_step)."""
+    kw: Dict[str, Any] = {}
+    if tcfg.optimizer == "adamw":
+        kw = dict(weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+    init_opt, update = make_optimizer(tcfg.optimizer, tcfg.lr, **kw)
+
+    def grads_fn(params, batch):
+        if tcfg.microbatches <= 1:
+            return jax.value_and_grad(
+                lambda p: model.loss(p, batch))(params)
+
+        k = tcfg.microbatches
+
+        def split(x):
+            if x.ndim == 0:
+                return x
+            b = x.shape[0]
+            assert b % k == 0, (b, k)
+            return x.reshape((k, b // k) + x.shape[1:])
+
+        mbatches = jax.tree.map(split, batch)
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, g = jax.value_and_grad(
+                lambda p: model.loss(p, mb))(params)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        (loss_sum, g_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), mbatches)
+        inv = 1.0 / k
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_fn(params, batch)
+        params, opt_state = update(params, grads, opt_state)
+        metrics = {"loss": loss.astype(jnp.float32)}
+        return params, opt_state, metrics
+
+    return init_opt, train_step

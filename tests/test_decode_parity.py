@@ -1,0 +1,87 @@
+"""Decode-vs-forward logits parity: feeding tokens one at a time through
+``decode_step`` (with the optimized one-hot/grouped-GQA cache path) must
+reproduce the full-sequence forward's next-token logits.  This is the
+strongest end-to-end correctness check of the serving path — it exercises
+the KV ring buffer, RoPE position handling, GQA grouping, SSM state
+updates and the hybrid shared-attention cache at once."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import build
+
+T = 12
+
+
+def _full_forward_logits(model, params, tokens):
+    """Next-token logits at every position via the training-path forward."""
+    cfg = model.cfg
+    from repro.models import hybrid, ssm, transformer
+    x = transformer.embed(params, cfg, tokens)
+    positions = jnp.arange(x.shape[1])
+    if cfg.family == "hybrid":
+        hidden = hybrid.forward(params, cfg, x, positions)
+    elif cfg.family == "ssm":
+        def body(x, lp):
+            return ssm.mamba_block(lp, cfg, x), None
+        hidden, _ = jax.lax.scan(body, x, params["layers"])
+        from repro.models import layers as L
+        hidden = L.rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+    else:
+        hidden = transformer.forward(params, cfg, x, positions)
+    return transformer.logits_fn(params, cfg, hidden)
+
+
+def _decode_logits(model, params, tokens):
+    cfg = model.cfg
+    cache = model.init_cache(tokens.shape[0], T + 4, dtype=jnp.float32)
+    outs = []
+    for i in range(tokens.shape[1]):
+        logits, cache = model.decode_step(
+            params, cache, tokens[:, i: i + 1], jnp.asarray(i, jnp.int32))
+        outs.append(logits[:, 0])
+    return jnp.stack(outs, axis=1)  # (B, T, V)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-8b", "yi-34b", "mamba2-1.3b",
+                                  "zamba2-7b", "qwen3-moe-30b-a3b"])
+def test_decode_matches_forward(arch):
+    cfg = configs.get_smoke(arch)
+    # decode must use the training numerics for the comparison
+    cfg = dataclasses.replace(cfg, attn_chunk=T)
+    if cfg.n_experts:
+        # Capacity dropping is batch-dependent by construction (GShard);
+        # exact parity requires a drop-free capacity. The dropping path is
+        # covered by the moe smoke tests.
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (2, T), 0, cfg.vocab_size, dtype=jnp.int32)
+    ref = np.asarray(_full_forward_logits(model, params, tokens),
+                     dtype=np.float32)
+    dec = np.asarray(_decode_logits(model, params, tokens),
+                     dtype=np.float32)
+    # compare next-token distributions position by position
+    np.testing.assert_allclose(dec, ref, atol=2e-3, rtol=2e-3)
+
+
+def test_decode_parity_with_int8_kv_close():
+    """int8 KV quantization (the §Perf C4 knob) stays close in argmax."""
+    cfg = dataclasses.replace(
+        configs.get_smoke("qwen3-8b"), attn_chunk=T,
+        kv_cache_dtype="int8")
+    model = build(cfg)
+    cfg_ref = dataclasses.replace(cfg, kv_cache_dtype="bfloat16")
+    model_ref = build(cfg_ref)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(
+        jax.random.PRNGKey(1), (2, T), 0, cfg.vocab_size, dtype=jnp.int32)
+    dec8 = np.asarray(_decode_logits(model, params, tokens))
+    dec16 = np.asarray(_decode_logits(model_ref, params, tokens))
+    agree = np.mean(dec8.argmax(-1) == dec16.argmax(-1))
+    assert agree >= 0.8, agree

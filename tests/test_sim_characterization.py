@@ -1,0 +1,118 @@
+"""Validate the CMP model against the paper's characterization (§2).
+
+These tests pin the *reproduction claims*: the Fig. 2 classification counts,
+the named per-application behaviours, and Observations 1-5.
+"""
+import numpy as np
+import pytest
+
+from repro.sim.apps import APP_NAMES, EXPECTED_CLASS_COUNTS
+from repro.sim.characterization import (
+    BASE,
+    classify_all,
+    leslie3d_interactions,
+    prefetch_vs_allocation,
+    sensitivity_table,
+    _ipc,
+)
+
+
+@pytest.fixture(scope="module")
+def table():
+    return sensitivity_table()
+
+
+@pytest.fixture(scope="module")
+def classes():
+    return classify_all()
+
+
+def test_fig2_classification_counts(classes):
+    """Paper Fig. 2 caption: 6 CS-BS-PS, 8 CS-BS, 6 BS-PS, 3 CS, 3 BS, 3 I."""
+    counts = {}
+    for cls in classes.values():
+        counts[cls] = counts.get(cls, 0) + 1
+    assert counts == EXPECTED_CLASS_COUNTS
+
+
+def test_obs1_sensitivity_fractions(classes):
+    """Observation 1: ~90% sensitive to >=1 resource, ~70% to multiple."""
+    n = len(classes)
+    sensitive = sum(1 for c in classes.values() if c != "I")
+    multi = sum(1 for c in classes.values() if "-" in c)
+    assert sensitive / n >= 0.85
+    assert multi / n >= 0.65
+
+
+def test_named_behaviours(classes):
+    assert classes["lbm"] == "BS-PS"
+    assert classes["xalancbmk"] == "CS-BS"
+    assert classes["leslie3d"] == "CS-BS-PS"
+    assert classes["libquantum"] == "BS-PS"
+    assert classes["povray"] == "I"
+
+
+def test_xalancbmk_prefetch_averse(table):
+    """Paper Fig. 1/2: xalancbmk loses performance with prefetching on."""
+    assert table["xalancbmk"]["P-B"] < -0.05
+
+
+def test_low_allocation_sensitivity_exceeds_high(table):
+    """Paper §2.1: more applications are sensitive in the low-allocation
+    setting than the high-allocation setting, for both cache and bw."""
+    thr = 0.10
+    cl = sum(1 for r in table.values() if abs(r["C-L"]) >= thr)
+    ch = sum(1 for r in table.values() if abs(r["C-H"]) >= thr)
+    bl = sum(1 for r in table.values() if abs(r["B-L"]) >= thr)
+    bh = sum(1 for r in table.values() if abs(r["B-H"]) >= thr)
+    assert cl >= ch
+    assert bl >= bh
+
+
+def test_obs2_hmmer_prefetch_sensitive_at_low_alloc_only():
+    """Paper Fig. 3: hmmer gains from prefetch at low allocation, not at
+    baseline — prefetch sensitivity depends on cache/bw allocation."""
+    r = prefetch_vs_allocation("hmmer")
+    assert r["P-L"] >= 0.10
+    assert r["P-B"] < 0.10
+
+
+def test_obs2_gcc_prefetch_sensitive_at_high_alloc():
+    """Paper Fig. 3: gcc gains more from prefetching at high allocation."""
+    r = prefetch_vs_allocation("gcc")
+    assert r["P-H"] > 0.0
+    assert r["P-H"] >= r["P-L"]
+
+
+def test_obs3_bandwidth_compensates_prefetch():
+    """Observation 3: more bandwidth -> larger prefetch gain (leslie3d)."""
+    fig4a = leslie3d_interactions()["fig4a"]
+    gain_low = fig4a["on"][0] / fig4a["off"][0]
+    gain_high = fig4a["on"][-1] / fig4a["off"][-1]
+    assert gain_high > gain_low
+
+
+def test_obs4_cache_prefetch_tradeoff():
+    """Observation 4 (Fig. 4c): 128 kB + prefetch >= 512 kB w/o prefetch."""
+    ipc_small_pf = _ipc("leslie3d", 4, BASE[1], True)
+    ipc_base_nopf = _ipc("leslie3d", 16, BASE[1], False)
+    assert ipc_small_pf >= 0.95 * ipc_base_nopf
+
+
+def test_obs5_cache_gain_larger_at_low_bandwidth():
+    """Observation 5 (Fig. 4d): cache helps more when bandwidth is scarce."""
+    fig4d = leslie3d_interactions()["fig4d"]
+    assert fig4d["gain"][0] > fig4d["gain"][-1]
+    assert fig4d["gain"][0] >= 0.10
+
+
+def test_monotonicity_cache():
+    """More cache never hurts (single app, fixed bw, pf off)."""
+    ipcs = [_ipc("omnetpp", u, 4.0, False) for u in (4, 8, 16, 32, 64, 128)]
+    assert all(b >= a - 1e-9 for a, b in zip(ipcs, ipcs[1:]))
+
+
+def test_monotonicity_bandwidth():
+    """More bandwidth never hurts."""
+    ipcs = [_ipc("lbm", 16, b, False) for b in (1.0, 2.0, 4.0, 8.0, 16.0)]
+    assert all(b >= a - 1e-9 for a, b in zip(ipcs, ipcs[1:]))

@@ -1,0 +1,106 @@
+"""Integration tests: the ten Table-3 managers on the CMP plant (paper §5)."""
+import numpy as np
+import pytest
+
+from repro.core import CBPCoordinator, CBPParams, Mode, PrefetchMode
+from repro.sim import (
+    MANAGER_NAMES,
+    WORKLOADS,
+    antt,
+    baseline_ipc,
+    run_all_managers,
+    weighted_speedup,
+)
+from repro.sim.runner import CMPPlant
+
+
+@pytest.fixture(scope="module")
+def w1_results():
+    return run_all_managers(WORKLOADS["w1"], total_ms=60.0)
+
+
+@pytest.fixture(scope="module")
+def w1_base():
+    return baseline_ipc(WORKLOADS["w1"])
+
+
+def test_all_managers_run(w1_results):
+    assert set(w1_results) == set(MANAGER_NAMES)
+    for res in w1_results.values():
+        assert res.ipc.shape == (16,)
+        assert np.isfinite(res.ipc).all()
+        assert (res.ipc > 0).all()
+
+
+def test_cbp_beats_baseline(w1_results, w1_base):
+    assert weighted_speedup(w1_results["CBP"].ipc, w1_base) > 1.10
+
+
+def test_cbp_beats_single_resource_managers(w1_results, w1_base):
+    cbp = weighted_speedup(w1_results["CBP"].ipc, w1_base)
+    for single in ("only cache", "only bw", "only pref", "equal off"):
+        assert cbp > weighted_speedup(w1_results[single].ipc, w1_base)
+
+
+def test_cbp_fairness_improves(w1_results, w1_base):
+    """Fig. 10: CBP ANTT below baseline (lower is better)."""
+    assert antt(w1_results["CBP"].ipc, w1_base) < 1.0
+
+
+def test_cbp_allocations_valid(w1_results):
+    alloc = w1_results["CBP"].final_alloc
+    assert int(alloc.cache_units.sum()) == 256
+    assert (alloc.cache_units >= 4).all()
+    assert np.isclose(alloc.bandwidth.sum(), 64.0)
+    assert (alloc.bandwidth >= 1.0 - 1e-9).all()
+
+
+def test_cbp_geomean_over_all_workloads_beats_two_technique_managers():
+    """Headline claim (paper §5.1): CBP outperforms every two-technique
+    manager on geomean weighted speedup across the 14 mixes."""
+    names = ["bw+pref", "bw+cache", "cache+pref", "CPpf", "CBP"]
+    logs = {m: [] for m in names}
+    for apps in WORKLOADS.values():
+        base = baseline_ipc(apps)
+        res = run_all_managers(apps, total_ms=40.0, names=names)
+        for m in names:
+            logs[m].append(np.log(weighted_speedup(res[m].ipc, base)))
+    geo = {m: float(np.exp(np.mean(v))) for m, v in logs.items()}
+    assert geo["CBP"] > geo["cache+pref"]
+    assert geo["CBP"] > geo["bw+cache"]
+    assert geo["CBP"] > geo["bw+pref"]
+    assert geo["CBP"] > geo["CPpf"]
+
+
+def test_coordinator_feedback_shrinks_cache_for_prefetch_friendly():
+    """Interaction #5: with prefetching on, a prefetch-friendly app's
+    utility curve flattens and it receives less cache."""
+    plant = CMPPlant(["leslie3d", "xalancbmk"])
+    params = CBPParams()
+    coord_pf = CBPCoordinator(plant, params=params,
+                              prefetch_mode=PrefetchMode.DYNAMIC)
+    coord_pf.run(60.0)
+    coord_nopf = CBPCoordinator(plant, params=params,
+                                prefetch_mode=PrefetchMode.OFF)
+    coord_nopf.run(60.0)
+    # leslie3d is prefetch friendly; with pf managed its cache share drops.
+    assert (coord_pf.alloc.cache_units[0]
+            <= coord_nopf.alloc.cache_units[0])
+
+
+def test_fig1_two_app_example():
+    """Paper Fig. 1: for {lbm, xalancbmk}, managing all three beats any
+    pair; xalancbmk gets most of the cache, lbm most of the bandwidth."""
+    from repro.sim.runner import CMPConfig
+    apps = ["lbm", "xalancbmk"]
+    cfg = CMPConfig(total_cache_units=64, total_bandwidth=16.0)
+    base = baseline_ipc(apps, cfg)
+    res = run_all_managers(apps, total_ms=60.0, config=cfg)
+    cbp = weighted_speedup(res["CBP"].ipc, base)
+    for pair in ("bw+pref", "bw+cache", "cache+pref"):
+        assert cbp >= weighted_speedup(res[pair].ipc, base) - 1e-6
+    alloc = res["CBP"].final_alloc
+    assert alloc.cache_units[1] > alloc.cache_units[0]   # xalancbmk cache
+    assert alloc.bandwidth[0] > alloc.bandwidth[1]       # lbm bandwidth
+    assert bool(alloc.prefetch_on[0])                    # lbm: pf active
+    assert not bool(alloc.prefetch_on[1])                # xalancbmk: off

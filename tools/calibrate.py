@@ -1,0 +1,91 @@
+"""Calibration harness: prints the paper-claim scoreboard for the sim.
+
+Usage:  PYTHONPATH=src python tools/calibrate.py [--quick]
+
+Targets (paper):
+  Fig 2 classes: 6 CS-BS-PS, 8 CS-BS, 6 BS-PS, 3 CS, 3 BS, 3 I
+  Fig 9 geomeans over w1..w14 (weighted speedup over baseline):
+    equal off ~1.10, only bw ~1.04, only pref ~1.09, only cache ~1.28,
+    bw+pref ~1.10, bw+cache ~1.37, cache+pref ~1.39, CPpf ~1.39, CBP ~1.50
+  CBP vs best-two ~ +11%; CBP up to +86%
+  Fig 10: CBP ANTT ~0.73 vs baseline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from repro.sim import (
+    APP_NAMES, MANAGER_NAMES, PROFILES, WORKLOADS,
+    antt, baseline_ipc, run_all_managers, weighted_speedup,
+)
+from repro.sim.characterization import classify_all, sensitivity_table
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--ms", type=float, default=100.0)
+    args = ap.parse_args()
+
+    print("=== Fig 2: per-app sensitivity classification ===")
+    classes = classify_all()
+    counts: dict = {}
+    for name, cls in classes.items():
+        counts[cls] = counts.get(cls, 0) + 1
+    tab = sensitivity_table()
+    for name in APP_NAMES:
+        r = tab[name]
+        print(f"{name:12s} {classes[name]:9s} "
+              f"C-L {r['C-L']:+6.1%}  C-H {r['C-H']:+6.1%}  "
+              f"B-L {r['B-L']:+6.1%}  B-H {r['B-H']:+6.1%}  "
+              f"P-B {r['P-B']:+6.1%}")
+    print("counts:", dict(sorted(counts.items())))
+    print("target: {'BS': 3, 'BS-PS': 6, 'CS': 3, 'CS-BS': 8, "
+          "'CS-BS-PS': 6, 'I': 3}")
+
+    if args.quick:
+        return
+
+    print("\n=== Fig 9/10: managers over w1..w14 ===")
+    ws: dict = {m: [] for m in MANAGER_NAMES}
+    antts: dict = {m: [] for m in MANAGER_NAMES}
+    t0 = time.time()
+    for wname, apps in WORKLOADS.items():
+        base = baseline_ipc(apps)
+        results = run_all_managers(apps, total_ms=args.ms)
+        row = []
+        for m in MANAGER_NAMES:
+            s = weighted_speedup(results[m].ipc, base)
+            ws[m].append(s)
+            antts[m].append(antt(results[m].ipc, base))
+            row.append(f"{m}={s:.3f}")
+        print(f"{wname}: " + " ".join(row))
+    print(f"[{time.time()-t0:.1f}s]")
+
+    print("\n=== geomeans ===")
+    target = {
+        "baseline": 1.00, "equal off": 1.10, "only cache": 1.28,
+        "only bw": 1.04, "only pref": 1.09, "bw+pref": 1.10,
+        "bw+cache": 1.37, "cache+pref": 1.39, "CPpf": 1.39, "CBP": 1.50,
+    }
+    for m in MANAGER_NAMES:
+        g = float(np.exp(np.mean(np.log(ws[m]))))
+        ga = float(np.exp(np.mean(np.log(antts[m]))))
+        print(f"{m:11s} ws={g:.3f} (target {target.get(m, float('nan')):.2f})"
+              f"  antt={ga:.3f}")
+    cbp = np.array(ws["CBP"])
+    best2 = np.maximum.reduce([np.array(ws["cache+pref"]),
+                               np.array(ws["bw+cache"]),
+                               np.array(ws["CPpf"]),
+                               np.array(ws["bw+pref"])])
+    print(f"CBP vs best-two per workload: geomean "
+          f"{float(np.exp(np.mean(np.log(cbp / best2)))) - 1.0:+.3%}, "
+          f"max CBP {cbp.max():.3f}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,79 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md from results/.
+
+Usage: PYTHONPATH=src python tools/gen_experiments.py
+Writes the §Dry-run and §Roofline tables between the AUTOGEN markers.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks.roofline_report import load_cells, markdown_table  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def dryrun_summary() -> str:
+    out = []
+    for mesh, label in (("single", "single-pod 16x16 (256 chips)"),
+                        ("multi", "multi-pod 2x16x16 (512 chips)")):
+        cells = load_cells(mesh)
+        ok = [c for c in cells if c["status"] == "ok"]
+        skip = [c for c in cells if c["status"] == "skip"]
+        err = [c for c in cells if c["status"] == "error"]
+        out.append(f"**{label}**: {len(ok)} compiled OK, "
+                   f"{len(skip)} policy skips, {len(err)} errors "
+                   f"(cells: {len(cells)}/40).")
+        if err:
+            for c in err:
+                out.append(f"  - ERROR {c['arch']} x {c['shape']}: "
+                           f"{c.get('error', '')[:120]}")
+    return "\n".join(out)
+
+
+def collective_table(mesh: str = "single") -> str:
+    rows = ["| arch | shape | AG GiB | AR GiB | RS GiB | A2A GiB | "
+            "CP GiB | #colls |", "|---|---|---|---|---|---|---|---|"]
+    for c in load_cells(mesh):
+        if c["status"] != "ok" or c["kind"] != "train":
+            continue
+        cb = c["parsed"]["collective_bytes"]
+        cc = c["parsed"]["collective_counts"]
+        g = lambda k: cb.get(k, 0.0) / 2**30
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {g('all-gather'):.1f} | "
+            f"{g('all-reduce'):.1f} | {g('reduce-scatter'):.1f} | "
+            f"{g('all-to-all'):.1f} | {g('collective-permute'):.1f} | "
+            f"{sum(cc.values())} |")
+    return "\n".join(rows)
+
+
+def main() -> None:
+    exp = ROOT / "EXPERIMENTS.md"
+    text = exp.read_text() if exp.exists() else ""
+    block = (
+        "<!-- AUTOGEN:DRYRUN START -->\n"
+        + dryrun_summary()
+        + "\n\n### Roofline table — single-pod (16, 16) mesh, "
+          "TPU v5e constants (197 TFLOP/s bf16, 819 GB/s HBM, "
+          "50 GB/s/link)\n\n"
+        + markdown_table("single")
+        + "\n\n### Per-step collective bytes by kind (train cells, "
+          "per device)\n\n"
+        + collective_table("single")
+        + "\n<!-- AUTOGEN:DRYRUN END -->"
+    )
+    if "<!-- AUTOGEN:DRYRUN START -->" in text:
+        pre = text.split("<!-- AUTOGEN:DRYRUN START -->")[0]
+        post = text.split("<!-- AUTOGEN:DRYRUN END -->")[1]
+        text = pre + block + post
+    else:
+        text = text + "\n" + block + "\n"
+    exp.write_text(text)
+    print(f"wrote {exp}")
+
+
+if __name__ == "__main__":
+    main()
