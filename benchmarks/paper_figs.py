@@ -15,11 +15,10 @@ from repro.core.types import CBPParams
 from repro.sim import (
     MANAGER_NAMES,
     WORKLOADS,
-    antt,
     baseline_ipc,
     evaluate,
     run_all_managers,
-    run_manager,
+    run_sweep,
     stack,
     weighted_speedup,
 )
@@ -30,7 +29,7 @@ from repro.sim.characterization import (
     prefetch_vs_allocation,
     sensitivity_table,
 )
-from repro.sim.runner import CMPPlant
+from repro.sim.runner import CMPConfig
 from repro.sim.workloads import random_workloads
 
 PAPER_GEOMEANS = {
@@ -181,24 +180,25 @@ def fig5_potential(n_workloads: int = 640) -> None:
 
 
 def fig9_fig10_main(total_ms: float = 100.0) -> Dict[str, Dict[str, float]]:
-    """Main evaluation: weighted speedup + ANTT, w1..w14 x 10 managers."""
+    """Main evaluation: weighted speedup + ANTT, w1..w14 x 10 managers.
+
+    Runs on the batched sweep substrate (``repro.sim.sweep``): all 14 mixes
+    are evaluated per manager in single jitted device calls.
+    """
     per_wl: Dict[str, Dict[str, float]] = {}
     with timer() as t:
-        logs = {m: [] for m in MANAGER_NAMES}
-        antts = {m: [] for m in MANAGER_NAMES}
-        for wname, apps in WORKLOADS.items():
-            base = baseline_ipc(apps)
-            res = run_all_managers(apps, total_ms=total_ms)
-            per_wl[wname] = {}
-            for m in MANAGER_NAMES:
-                ws = weighted_speedup(res[m].ipc, base)
-                per_wl[wname][m] = round(ws, 4)
-                logs[m].append(np.log(ws))
-                antts[m].append(np.log(antt(res[m].ipc, base)))
-        geo = {m: float(np.exp(np.mean(v))) for m, v in logs.items()}
-        geo_antt = {m: float(np.exp(np.mean(v))) for m, v in antts.items()}
-        cbp = np.exp(np.array(logs["CBP"]))
-        best2 = np.max([np.exp(np.array(logs[m]))
+        wnames = list(WORKLOADS)
+        res = run_sweep([WORKLOADS[w] for w in wnames], total_ms=total_ms)
+        ws = {m: res.weighted_speedup(m) for m in MANAGER_NAMES}   # (14,)
+        per_wl = {
+            w: {m: round(float(ws[m][i]), 4) for m in MANAGER_NAMES}
+            for i, w in enumerate(wnames)
+        }
+        geo = {m: float(np.exp(np.mean(np.log(ws[m])))) for m in MANAGER_NAMES}
+        geo_antt = {m: float(np.exp(np.mean(np.log(res.antt(m)))))
+                    for m in MANAGER_NAMES}
+        cbp = ws["CBP"]
+        best2 = np.max([ws[m]
                         for m in ("bw+pref", "bw+cache", "cache+pref",
                                   "CPpf")], axis=0)
     emit("fig9_weighted_speedup", t.seconds, {
@@ -222,25 +222,25 @@ def fig9_fig10_main(total_ms: float = 100.0) -> Dict[str, Dict[str, float]]:
 
 
 def fig11_case_study() -> None:
-    """w2 per-application IPC under the main managers."""
+    """w2 per-application IPC under the main managers (sweep substrate)."""
     with timer() as t:
         apps = WORKLOADS["w2"]
-        base = baseline_ipc(apps)
-        res = run_all_managers(
-            apps, total_ms=100.0,
-            names=["bw+cache", "cache+pref", "CBP"])
+        managers = ["bw+cache", "cache+pref", "CBP"]
+        res = run_sweep([apps], managers=managers, total_ms=100.0)
+        base = res.baseline_ipc[0]
+        ipc = {m: res.ipc[m][0] for m in managers}
         rows = {}
         for i, name in enumerate(apps):
             rows[f"{i}:{name}"] = {
-                m: round(float(res[m].ipc[i] / base[i]), 3)
-                for m in res
+                m: round(float(ipc[m][i] / base[i]), 3)
+                for m in managers
             }
         # group-1 apps prefer cache+pref; group-2 prefer bw+cache; CBP
         # should track the better of the two for most apps.
         better = 0
         for i in range(len(apps)):
-            target = max(res["bw+cache"].ipc[i], res["cache+pref"].ipc[i])
-            if res["CBP"].ipc[i] >= 0.9 * target:
+            target = max(ipc["bw+cache"][i], ipc["cache+pref"][i])
+            if ipc["CBP"][i] >= 0.9 * target:
                 better += 1
     emit("fig11_case_study_w2", t.seconds, {
         "apps_where_cbp_within_10pct_of_best_pair": f"{better}/16",
@@ -250,21 +250,16 @@ def fig11_case_study() -> None:
 
 def fig12_sensitivity() -> None:
     """Design-parameter sensitivity: reconfiguration interval, cache size,
-    min-bandwidth, prefetch sampling period."""
+    min-bandwidth, prefetch sampling period (sweep substrate)."""
     apps = WORKLOADS["w1"]
-    base = baseline_ipc(apps)
 
     def cbp_ws(params: CBPParams, cache_units: int = 256,
                llc_extra: float = 0.0) -> float:
-        from repro.sim.runner import CMPConfig
         cfgS = CMPConfig(total_cache_units=cache_units,
                          llc_extra_cycles=llc_extra)
-        plant = CMPPlant(apps, cfgS)
-        res = run_manager("CBP", plant, total_ms=100.0, params=params)
-        if cache_units != 256 or llc_extra:
-            b = baseline_ipc(apps, cfgS)
-            return weighted_speedup(res.ipc, b)
-        return weighted_speedup(res.ipc, base)
+        res = run_sweep([apps], managers=["CBP"], total_ms=100.0,
+                        params=params, config=cfgS)
+        return float(res.weighted_speedup("CBP")[0])
 
     with timer() as t:
         interval = {

@@ -10,7 +10,12 @@ adaptation — see DESIGN.md §2).
 from repro.core.atd import SampledATD, StackDistanceMonitor
 from repro.core.bandwidth_controller import BandwidthController, allocate_bandwidth
 from repro.core.cache_controller import CacheController, lookahead_allocate
-from repro.core.coordinator import CBPCoordinator, Plant
+from repro.core.coordinator import (
+    CBPCoordinator,
+    Plant,
+    ScheduleSegment,
+    fig8_schedule,
+)
 from repro.core.prefetch_controller import PrefetchController, throttle_decision
 from repro.core.types import Allocation, CBPParams, IntervalStats, Mode, PrefetchMode
 
@@ -23,6 +28,8 @@ __all__ = [
     "lookahead_allocate",
     "CBPCoordinator",
     "Plant",
+    "ScheduleSegment",
+    "fig8_schedule",
     "PrefetchController",
     "throttle_decision",
     "Allocation",

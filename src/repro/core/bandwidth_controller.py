@@ -16,35 +16,34 @@ def allocate_bandwidth(
     total_bandwidth: float,
     min_allocation: float,
 ) -> np.ndarray:
-    """Algorithm 1, verbatim.
+    """Algorithm 1, verbatim, vectorized over leading batch axes.
 
     Args:
-      queuing_delay: (n,) accumulated per-client queuing delays (any unit —
-        only proportions matter).
+      queuing_delay: (..., n) accumulated per-client queuing delays (any
+        unit — only proportions matter).  Leading axes (e.g. the sweep
+        runner's mix axis) each get an independent allocation.
       total_bandwidth: capacity to distribute (GB/s).
       min_allocation: per-client floor (GB/s).
 
     Returns:
-      (n,) float allocation summing to ``total_bandwidth``.
+      (..., n) float allocation summing to ``total_bandwidth`` per batch.
     """
     delay = np.asarray(queuing_delay, dtype=np.float64)
-    n = len(delay)
+    n = delay.shape[-1]
     if min_allocation * n > total_bandwidth:
         raise ValueError("min_allocation * n exceeds total bandwidth")
 
     # line 2: remaining after floors
     remaining = total_bandwidth - min_allocation * n
-    alloc = np.full(n, min_allocation, dtype=np.float64)  # line 5
+    alloc = np.full(delay.shape, min_allocation, dtype=np.float64)  # line 5
 
-    total_delay = float(delay.sum())  # line 4
-    if total_delay <= 0.0:
-        # No one queued: split the remainder evenly.
-        alloc += remaining / n
-    else:
-        # lines 7-9: proportional share of the remainder
-        alloc += delay / total_delay * remaining
-
-    return alloc
+    total_delay = delay.sum(axis=-1, keepdims=True)  # line 4
+    # lines 7-9: proportional share of the remainder; no one queued ->
+    # split the remainder evenly.
+    share = np.where(total_delay > 0,
+                     delay / np.where(total_delay > 0, total_delay, 1.0),
+                     1.0 / n)
+    return alloc + share * remaining
 
 
 class BandwidthController:

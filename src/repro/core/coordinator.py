@@ -54,6 +54,53 @@ class IntervalRecord:
     stats: IntervalStats
 
 
+@dataclasses.dataclass(frozen=True)
+class ScheduleSegment:
+    """One segment of the Fig. 8 timeline.
+
+    ``kind`` is one of ``"reconfigure"`` (zero-duration boundary where the
+    cache/bandwidth controllers fire), ``"sample_off"`` / ``"sample_on"``
+    (the prefetch A/B sampling periods), and ``"run"`` (the remainder of the
+    reconfiguration interval under the decided allocation).
+    """
+
+    kind: str
+    duration_ms: float
+
+
+def fig8_schedule(total_ms: float, params: CBPParams,
+                  prefetch_dynamic: bool) -> List[ScheduleSegment]:
+    """The Fig. 8 timeline as data, shared by every coordinator.
+
+    Both :class:`CBPCoordinator` (one plant at a time) and the batched sweep
+    coordinator (``repro.sim.sweep``) execute exactly this segment list, so
+    the scalar and batched paths cannot drift apart on scheduling.  The
+    non-boundary durations sum exactly to ``total_ms`` whenever each
+    reconfiguration interval can contain its sampling overhead (see
+    ``tests/test_coordinator_timeline.py``).
+    """
+    segments: List[ScheduleSegment] = []
+    t = 0.0
+    first = True
+    while t < total_ms - 1e-9:
+        if not first:
+            segments.append(ScheduleSegment("reconfigure", 0.0))
+        sampled = 0.0
+        if prefetch_dynamic:
+            p = params.prefetch_sampling_period_ms
+            segments.append(ScheduleSegment("sample_off", p))
+            segments.append(ScheduleSegment("sample_on", p))
+            sampled = 2.0 * p
+            t += sampled
+        remain = min(params.reconfiguration_interval_ms - sampled,
+                     total_ms - t)
+        if remain > 0:
+            segments.append(ScheduleSegment("run", remain))
+            t += remain
+        first = False
+    return segments
+
+
 class CBPCoordinator:
     """Dynamically manage cache, bandwidth and prefetch (paper Fig. 8).
 
@@ -118,22 +165,6 @@ class CBPCoordinator:
         self._t_ms += duration_ms
         return stats
 
-    def _sample_prefetch(self) -> None:
-        """Step 1 / Step 4 (Fig. 8): A/B sample IPC over 2x sampling period.
-
-        The samples run under the *current* cache+bandwidth allocation —
-        interactions #3/#4.
-        """
-        p = self.params.prefetch_sampling_period_ms
-        off = self.alloc.copy()
-        off.prefetch_on = np.zeros(self.plant.n_clients, dtype=bool)
-        on = self.alloc.copy()
-        on.prefetch_on = np.ones(self.plant.n_clients, dtype=bool)
-        stats_off = self._run(off, p)
-        stats_on = self._run(on, p)
-        enabled = self.pf_ctl.update(stats_on.ipc, stats_off.ipc)
-        self.alloc.prefetch_on = enabled
-
     def _reconfigure(self) -> None:
         """Reconfiguration boundary: cache -> bandwidth (priority order)."""
         if self.cache_mode == Mode.DYNAMIC:
@@ -151,22 +182,31 @@ class CBPCoordinator:
     # ------------------------------------------------------------------ #
 
     def run(self, total_ms: float) -> List[IntervalRecord]:
-        """Run the Fig. 8 timeline for ``total_ms``."""
-        p = self.params
-        first = True
-        while self._t_ms < total_ms - 1e-9:
-            if not first:
-                self._reconfigure()  # Steps 2-3
-            # Step 1/4: prefetch sampling + decision for this interval.
-            sampled = 0.0
-            if self.prefetch_mode == PrefetchMode.DYNAMIC:
-                self._sample_prefetch()
-                sampled = 2 * p.prefetch_sampling_period_ms
-            remain = min(p.reconfiguration_interval_ms - sampled,
-                         total_ms - self._t_ms)
-            if remain > 0:
-                self._run(self.alloc, remain)
-            first = False
+        """Run the Fig. 8 timeline for ``total_ms``.
+
+        The A/B samples run under the *current* cache+bandwidth allocation —
+        interactions #3/#4.
+        """
+        n = self.plant.n_clients
+        stats_off: Optional[IntervalStats] = None
+        schedule = fig8_schedule(
+            total_ms, self.params,
+            self.prefetch_mode == PrefetchMode.DYNAMIC)
+        for seg in schedule:
+            if seg.kind == "reconfigure":     # Steps 2-3
+                self._reconfigure()
+            elif seg.kind == "sample_off":    # Step 1/4
+                off = self.alloc.copy()
+                off.prefetch_on = np.zeros(n, dtype=bool)
+                stats_off = self._run(off, seg.duration_ms)
+            elif seg.kind == "sample_on":
+                on = self.alloc.copy()
+                on.prefetch_on = np.ones(n, dtype=bool)
+                stats_on = self._run(on, seg.duration_ms)
+                self.alloc.prefetch_on = self.pf_ctl.update(
+                    stats_on.ipc, stats_off.ipc)
+            else:
+                self._run(self.alloc, seg.duration_ms)
         return self.history
 
     # Aggregation helpers ------------------------------------------------ #

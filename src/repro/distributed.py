@@ -18,6 +18,40 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 _state = threading.local()
 
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """Version shim: ``jax.sharding.AxisType`` landed after 0.4.x.
+
+    On new JAX, ``jax.make_mesh`` wants explicit axis types; on old JAX the
+    attribute (and the ``axis_types`` kwarg) does not exist.  Returns the
+    kwargs dict to splat into ``jax.make_mesh``.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape, axis_names) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types on JAX versions that have them."""
+    return jax.make_mesh(shape, axis_names, **axis_types_kwargs(len(shape)))
+
+
+def shard_map(worker, mesh, in_specs, out_specs):
+    """Version shim over ``shard_map``'s migration into the jax namespace.
+
+    New JAX: ``jax.shard_map(..., check_vma=...)``; old JAX:
+    ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.  Replication
+    checking is disabled (callers use collectives the checker cannot type).
+    """
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn(worker, mesh=mesh, in_specs=in_specs,
+                  out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as exp_shard_map
+    return exp_shard_map(worker, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
 # Logical axis groups: "dp" spreads over every data-parallel mesh axis.
 DP_AXES = ("pod", "data")
 

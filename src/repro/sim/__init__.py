@@ -13,17 +13,45 @@ from repro.sim.apps import (
     TOTAL_UNITS_8MB,
     AppArrays,
     stack,
+    stack_mixes,
 )
-from repro.sim.managers import MANAGER_NAMES, ManagerResult, run_all_managers, run_manager
+from repro.sim.managers import (
+    MANAGER_NAMES,
+    TABLE3_MODES,
+    ManagerResult,
+    run_all_managers,
+    run_manager,
+)
 from repro.sim.memsys import SteadyState, evaluate, mpki_curve, utility_curves
 from repro.sim.runner import CMPConfig, CMPPlant, antt, baseline_ipc, weighted_speedup
-from repro.sim.workloads import WORKLOADS, random_workloads
+from repro.sim.workloads import WORKLOADS, random_mixes, random_workloads
+
+# The sweep substrate pulls in jax; load it lazily (PEP 562) so the scalar
+# numpy path stays importable without paying JAX startup cost.
+_SWEEP_EXPORTS = (
+    "BatchedCMPPlant", "BatchedCoordinator", "SweepResult",
+    "baseline_ipc_batched", "run_sweep",
+)
+
+
+def __getattr__(name):
+    if name in _SWEEP_EXPORTS or name == "memsys_jax":
+        import importlib
+        module = importlib.import_module(
+            "repro.sim.memsys_jax" if name == "memsys_jax"
+            else "repro.sim.sweep")
+        return module if name == "memsys_jax" else getattr(module, name)
+    raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")
 
 __all__ = [
     "APP_NAMES", "BASELINE_BW_GBPS", "BASELINE_UNITS", "MIN_UNITS",
     "PROFILES", "TOTAL_BW_GBPS", "TOTAL_UNITS_8MB", "AppArrays", "stack",
-    "MANAGER_NAMES", "ManagerResult", "run_all_managers", "run_manager",
+    "stack_mixes",
+    "MANAGER_NAMES", "TABLE3_MODES", "ManagerResult", "run_all_managers",
+    "run_manager",
     "SteadyState", "evaluate", "mpki_curve", "utility_curves",
     "CMPConfig", "CMPPlant", "antt", "baseline_ipc", "weighted_speedup",
-    "WORKLOADS", "random_workloads",
+    "BatchedCMPPlant", "BatchedCoordinator", "SweepResult",
+    "baseline_ipc_batched", "run_sweep",
+    "WORKLOADS", "random_mixes", "random_workloads",
 ]

@@ -127,17 +127,39 @@ class AppArrays:
 
     @property
     def n(self) -> int:
-        return len(self.cpi_base)
+        """Apps per workload (last axis — fields may carry a mix batch)."""
+        return int(np.asarray(self.cpi_base).shape[-1])
+
+
+#: Numeric model-parameter fields, the single source of truth for the
+#: numpy and JAX model implementations and the stacking helpers.
+MODEL_FIELDS = tuple(
+    f.name for f in dataclasses.fields(AppArrays) if f.name != "names")
 
 
 def stack(apps: Sequence[str]) -> AppArrays:
     """Build model-input arrays for a workload (list of app names)."""
     ps = [PROFILES[a] for a in apps]
-    f = lambda attr: np.array([getattr(p, attr) for p in ps], dtype=np.float64)
-    return AppArrays(
-        cpi_base=f("cpi_base"), apki=f("apki"),
-        mpki_min_alloc=f("mpki_min_alloc"), mpki_floor=f("mpki_floor"),
-        ws_units=f("ws_units"), mlp=f("mlp"), wb_frac=f("wb_frac"),
-        pf_cov=f("pf_cov"), pf_acc=f("pf_acc"), pf_hide=f("pf_hide"),
-        pf_pollution=f("pf_pollution"), names=[p.name for p in ps],
-    )
+    arrays = {
+        attr: np.array([getattr(p, attr) for p in ps], dtype=np.float64)
+        for attr in MODEL_FIELDS
+    }
+    return AppArrays(names=[p.name for p in ps], **arrays)
+
+
+def stack_mixes(mixes: Sequence[Sequence[str]]) -> AppArrays:
+    """Struct-of-arrays over a batch of equal-size mixes: fields are (M, n).
+
+    The leading mix axis broadcasts straight through the interval model
+    (:mod:`repro.sim.memsys` / :mod:`repro.sim.memsys_jax`), which is how the
+    sweep runner evaluates every mix in one device call.
+    """
+    stacks = [stack(list(m)) for m in mixes]
+    sizes = {s.n for s in stacks}
+    if len(sizes) != 1:
+        raise ValueError(f"mixes must be equal-size, got sizes {sorted(sizes)}")
+    arrays = {
+        attr: np.stack([getattr(s, attr) for s in stacks])
+        for attr in MODEL_FIELDS
+    }
+    return AppArrays(names=[s.names for s in stacks], **arrays)

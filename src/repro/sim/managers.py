@@ -32,7 +32,7 @@ MANAGER_NAMES = [
 ]
 
 # (cache_mode, bandwidth_mode, prefetch_mode) per Table 3.
-_TABLE3 = {
+TABLE3_MODES = {
     "baseline":   (Mode.UNPARTITIONED, Mode.UNPARTITIONED, PrefetchMode.OFF),
     "equal off":  (Mode.EQUAL,         Mode.EQUAL,         PrefetchMode.OFF),
     "equal on":   (Mode.EQUAL,         Mode.EQUAL,         PrefetchMode.ON),
@@ -62,7 +62,7 @@ def run_manager(
     params = params or CBPParams()
     if name == "CPpf":
         return _run_cppf(plant, total_ms, params)
-    cache_mode, bw_mode, pf_mode = _TABLE3[name]
+    cache_mode, bw_mode, pf_mode = TABLE3_MODES[name]
     coord = CBPCoordinator(
         plant, params=params,
         cache_mode=cache_mode, bandwidth_mode=bw_mode, prefetch_mode=pf_mode)

@@ -23,21 +23,36 @@ class CMPConfig:
     total_cache_units: int = apps_mod.TOTAL_UNITS_8MB
     total_bandwidth: float = apps_mod.TOTAL_BW_GBPS
     llc_extra_cycles: float = 0.0   # added LLC hit latency (bigger tiles)
+    backend: str = "numpy"          # "numpy" (golden ref) | "jax" (batched)
 
 
 class CMPPlant:
-    """16-core tiled CMP interval model (paper Table 1) as a CBP plant."""
+    """16-core tiled CMP interval model (paper Table 1) as a CBP plant.
+
+    ``config.backend`` selects the model implementation: ``"numpy"`` is the
+    golden reference; ``"jax"`` dispatches to the jitted
+    :mod:`repro.sim.memsys_jax` port (same math, parity-tested to 1e-5 —
+    see ``tests/test_sim_sweep.py``).
+    """
 
     def __init__(self, workload: Sequence[str],
                  config: Optional[CMPConfig] = None):
         self.apps: AppArrays = stack(list(workload))
         self.config = config or CMPConfig()
+        if self.config.backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {self.config.backend!r}")
         self.n_clients = self.apps.n
         self.total_cache_units = self.config.total_cache_units
         self.total_bandwidth = self.config.total_bandwidth
 
+    def _memsys(self):
+        if self.config.backend == "jax":
+            from repro.sim import memsys_jax
+            return memsys_jax
+        return memsys
+
     def evaluate(self, alloc: Allocation) -> memsys.SteadyState:
-        return memsys.evaluate(
+        ss = self._memsys().evaluate(
             self.apps,
             alloc.cache_units.astype(np.float64),
             alloc.bandwidth,
@@ -48,13 +63,18 @@ class CMPPlant:
             total_bandwidth_gbps=self.total_bandwidth,
             llc_extra_cycles=self.config.llc_extra_cycles,
         )
+        if self.config.backend == "jax":
+            ss = memsys.SteadyState(**{
+                f.name: np.asarray(getattr(ss, f.name))
+                for f in dataclasses.fields(memsys.SteadyState)})
+        return ss
 
     def run_interval(self, alloc: Allocation,
                      duration_ms: float) -> IntervalStats:
         ss = self.evaluate(alloc)
-        curves = memsys.utility_curves(
+        curves = np.asarray(self._memsys().utility_curves(
             self.apps, alloc.prefetch_on, ss.ipc,
-            self.total_cache_units, duration_ms=1.0)
+            self.total_cache_units, duration_ms=1.0))
         instr = ss.ipc * memsys.FREQ_GHZ * 1e6 * duration_ms
         return IntervalStats(
             ipc=ss.ipc,

@@ -1,0 +1,332 @@
+"""Batched Table-3 sweep runner (the Figs. 9-12 evaluation substrate).
+
+The paper's headline results come from running ten resource-manager
+configurations over dozens of 16-core workload mixes.  The scalar path
+(:func:`repro.sim.managers.run_all_managers`) evaluates one (mix, manager)
+pair at a time; this module stacks all mixes along a leading batch axis and
+drives the jitted JAX interval model (:mod:`repro.sim.memsys_jax`), so each
+timeline segment of each manager is ONE device call covering every mix —
+no Python loop ever calls ``memsys.evaluate`` per (mix, manager) pair.
+
+Structure:
+
+* :class:`BatchedCMPPlant` — the CMP interval model over M stacked mixes;
+  ``run_interval`` takes (M, n) allocation arrays and returns (M, n) stats.
+* :class:`BatchedCoordinator` — :class:`~repro.core.CBPCoordinator`
+  vectorized over the mix axis.  It executes exactly the same
+  :func:`~repro.core.fig8_schedule` segment list, so scalar and batched
+  trajectories cannot drift apart on scheduling.  Only the integer
+  Lookahead allocator runs per mix (a data-dependent greedy loop).
+* :func:`run_sweep` — evaluate a set of managers over a set of mixes;
+  returns a :class:`SweepResult` with per-mix IPC, weighted speedup and
+  ANTT against the shared unpartitioned baseline.
+
+Parity contract: with the same mixes and parameters, per-mix results match
+the scalar numpy path up to the 1e-5 model tolerance (and bit-identical
+controller decisions away from knife-edges) — see ``tests/test_sim_sweep.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import (
+    Allocation,
+    BandwidthController,
+    CBPParams,
+    Mode,
+    PrefetchMode,
+    fig8_schedule,
+    lookahead_allocate,
+    throttle_decision,
+)
+from repro.core.types import IntervalStats
+from repro.sim import memsys, memsys_jax
+from repro.sim.apps import AppArrays, stack_mixes
+from repro.sim.managers import MANAGER_NAMES, TABLE3_MODES
+from repro.sim.runner import CMPConfig
+
+
+class BatchedCMPPlant:
+    """The 16-core CMP interval model over M stacked workload mixes.
+
+    Allocation arrays carry a leading mix axis — ``cache_units`` etc. are
+    (M, n) — and every ``run_interval`` is one jitted device call.
+    """
+
+    def __init__(self, mixes: Sequence[Sequence[str]],
+                 config: Optional[CMPConfig] = None):
+        self.mixes: List[List[str]] = [list(m) for m in mixes]
+        self.apps: AppArrays = stack_mixes(self.mixes)
+        self.config = config or CMPConfig()
+        if self.config.backend not in ("numpy", "jax"):
+            raise ValueError(f"unknown backend {self.config.backend!r}")
+        # config.backend selects the SCALAR plant's model implementation;
+        # the batched plant is the JAX path by construction and uses the
+        # remaining CMPConfig fields (capacities, llc_extra_cycles) as-is.
+        self.n_mixes, self.n_clients = np.asarray(self.apps.cpi_base).shape
+        self.total_cache_units = self.config.total_cache_units
+        self.total_bandwidth = self.config.total_bandwidth
+
+    def evaluate(self, alloc: Allocation) -> memsys.SteadyState:
+        return memsys_jax.evaluate(
+            self.apps,
+            np.asarray(alloc.cache_units, dtype=np.float64),
+            alloc.bandwidth,
+            alloc.prefetch_on,
+            cache_partitioned=alloc.cache_mode != Mode.UNPARTITIONED,
+            bandwidth_partitioned=alloc.bandwidth_mode != Mode.UNPARTITIONED,
+            total_cache_units=float(self.total_cache_units),
+            total_bandwidth_gbps=self.total_bandwidth,
+            llc_extra_cycles=self.config.llc_extra_cycles,
+        )
+
+    def run_interval(self, alloc: Allocation,
+                     duration_ms: float) -> IntervalStats:
+        ss = self.evaluate(alloc)
+        curves = memsys_jax.utility_curves(
+            self.apps, alloc.prefetch_on, ss.ipc,
+            self.total_cache_units, duration_ms=1.0)
+        ipc = np.asarray(ss.ipc)
+        return IntervalStats(
+            ipc=ipc,
+            queuing_delay_ns=np.asarray(ss.queuing_delay_ns),
+            utility_curves=np.asarray(curves),
+            instructions=ipc * memsys.FREQ_GHZ * 1e6 * duration_ms,
+        )
+
+
+def baseline_ipc_batched(plant: BatchedCMPPlant) -> np.ndarray:
+    """Paper baseline per mix: unpartitioned everything, prefetch off."""
+    m, n = plant.n_mixes, plant.n_clients
+    alloc = Allocation(
+        cache_units=np.full((m, n), plant.total_cache_units // n),
+        bandwidth=np.full((m, n), plant.total_bandwidth / n),
+        prefetch_on=np.zeros((m, n), dtype=bool),
+        cache_mode=Mode.UNPARTITIONED,
+        bandwidth_mode=Mode.UNPARTITIONED,
+    )
+    return np.asarray(plant.evaluate(alloc).ipc)
+
+
+class BatchedCoordinator:
+    """One Table-3 manager, coordinated across all mixes in lockstep.
+
+    Mirrors :class:`repro.core.CBPCoordinator` state-for-state with a
+    leading mix axis: ATD counters are (M, n, U+1), the shared
+    :class:`~repro.core.BandwidthController` accumulates (M, n) delays,
+    and the prefetch A/B decision is elementwise.  All mixes share one
+    Fig. 8 timeline (it depends only on the manager's prefetch mode),
+    which is what makes lockstep exact.
+    """
+
+    def __init__(
+        self,
+        plant: BatchedCMPPlant,
+        params: Optional[CBPParams] = None,
+        cache_mode: Mode = Mode.DYNAMIC,
+        bandwidth_mode: Mode = Mode.DYNAMIC,
+        prefetch_mode: PrefetchMode = PrefetchMode.DYNAMIC,
+    ):
+        self.plant = plant
+        self.params = params or CBPParams()
+        self.cache_mode = cache_mode
+        self.bandwidth_mode = bandwidth_mode
+        self.prefetch_mode = prefetch_mode
+
+        m, n = plant.n_mixes, plant.n_clients
+        self._atd = np.zeros((m, n, plant.total_cache_units + 1))
+        self.bw_ctl = BandwidthController(
+            plant.total_bandwidth, self.params.min_bandwidth_allocation)
+        self._ipc_acc = np.zeros((m, n))
+        self._w_acc = 0.0
+
+        units = np.full(n, plant.total_cache_units // n, dtype=np.int64)
+        units[: plant.total_cache_units - int(units.sum())] += 1
+        self.alloc = Allocation(
+            cache_units=np.tile(units, (m, 1)),
+            bandwidth=np.full((m, n), plant.total_bandwidth / n),
+            prefetch_on=np.full((m, n), prefetch_mode == PrefetchMode.ON,
+                                dtype=bool),
+            cache_mode=cache_mode,
+            bandwidth_mode=bandwidth_mode,
+        )
+
+    # ------------------------------------------------------------------ #
+
+    def _run(self, alloc: Allocation, duration_ms: float) -> IntervalStats:
+        stats = self.plant.run_interval(alloc, duration_ms)
+        self._atd += stats.utility_curves * duration_ms
+        self.bw_ctl.observe(stats.queuing_delay_ns * duration_ms)
+        self._ipc_acc += stats.ipc * duration_ms
+        self._w_acc += duration_ms
+        return stats
+
+    def _reconfigure(self) -> None:
+        if self.cache_mode == Mode.DYNAMIC:
+            for i in range(self.plant.n_mixes):
+                self.alloc.cache_units[i] = lookahead_allocate(
+                    self._atd[i], self.plant.total_cache_units,
+                    self.params.min_ways)
+        self._atd *= 0.5
+        if self.bandwidth_mode == Mode.DYNAMIC:
+            self.alloc.bandwidth = self.bw_ctl.allocate()
+
+    def _with_prefetch(self, value: bool) -> Allocation:
+        alloc = self.alloc.copy()
+        alloc.prefetch_on = np.full(
+            (self.plant.n_mixes, self.plant.n_clients), value, dtype=bool)
+        return alloc
+
+    # ------------------------------------------------------------------ #
+
+    def run(self, total_ms: float) -> None:
+        stats_off: Optional[IntervalStats] = None
+        schedule = fig8_schedule(
+            total_ms, self.params,
+            self.prefetch_mode == PrefetchMode.DYNAMIC)
+        for seg in schedule:
+            if seg.kind == "reconfigure":
+                self._reconfigure()
+            elif seg.kind == "sample_off":
+                stats_off = self._run(self._with_prefetch(False),
+                                      seg.duration_ms)
+            elif seg.kind == "sample_on":
+                stats_on = self._run(self._with_prefetch(True),
+                                     seg.duration_ms)
+                self.alloc.prefetch_on = throttle_decision(
+                    stats_on.ipc, stats_off.ipc,
+                    self.params.speedup_threshold)
+            else:
+                self._run(self.alloc, seg.duration_ms)
+
+    def mean_ipc(self) -> np.ndarray:
+        return self._ipc_acc / max(self._w_acc, 1e-12)
+
+
+def _run_cppf_batched(plant: BatchedCMPPlant, total_ms: float,
+                      params: CBPParams):
+    """Vectorized CPpf (mirrors ``managers._run_cppf`` per mix)."""
+    m, n = plant.n_mixes, plant.n_clients
+    total_units = plant.total_cache_units
+    equal_units = np.full((m, n), total_units // n, dtype=np.int64)
+    bw = np.full((m, n), plant.total_bandwidth / n)
+
+    def make_alloc(units: np.ndarray, pf_on: np.ndarray) -> Allocation:
+        return Allocation(
+            cache_units=units, bandwidth=bw.copy(), prefetch_on=pf_on,
+            cache_mode=Mode.DYNAMIC, bandwidth_mode=Mode.UNPARTITIONED)
+
+    off = plant.run_interval(
+        make_alloc(equal_units, np.zeros((m, n), dtype=bool)),
+        params.prefetch_sampling_period_ms)
+    on = plant.run_interval(
+        make_alloc(equal_units, np.ones((m, n), dtype=bool)),
+        params.prefetch_sampling_period_ms)
+    friendly = throttle_decision(on.ipc, off.ipc, params.speedup_threshold)
+
+    pf_on = np.ones((m, n), dtype=bool)
+    units = equal_units.copy()
+    atd = np.zeros((m, n, total_units + 1))
+    ipc_acc = np.zeros((m, n))
+    w_acc = 0.0
+    t = 0.0
+    while t < total_ms - 1e-9:
+        dt = min(params.reconfiguration_interval_ms, total_ms - t)
+        stats = plant.run_interval(make_alloc(units, pf_on), dt)
+        atd += stats.utility_curves * dt
+        ipc_acc += stats.ipc * dt
+        w_acc += dt
+        t += dt
+        curves = atd.copy()
+        atd *= 0.5
+        for i in range(m):
+            others = np.where(~friendly[i])[0]
+            u = np.full(n, params.min_ways, dtype=np.int64)
+            remaining = total_units - params.min_ways * int(friendly[i].sum())
+            if len(others) > 0:
+                u[others] = lookahead_allocate(
+                    curves[i][others][:, : remaining + 1], remaining,
+                    params.min_ways)
+            else:
+                u += (total_units - int(u.sum())) // n
+            units[i] = u
+    return ipc_acc / w_acc, make_alloc(units, pf_on)
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-(manager, mix, app) outcome of one sweep."""
+
+    manager_names: List[str]
+    mixes: List[List[str]]
+    ipc: Dict[str, np.ndarray]            # name -> (M, n)
+    final_alloc: Dict[str, Allocation]    # name -> batched (M, n) allocation
+    baseline_ipc: np.ndarray              # (M, n)
+
+    @property
+    def n_mixes(self) -> int:
+        return len(self.mixes)
+
+    def weighted_speedup(self, name: str) -> np.ndarray:
+        """Paper §4.3 weighted speedup per mix, shape (M,)."""
+        return np.mean(self.ipc[name] / self.baseline_ipc, axis=-1)
+
+    def antt(self, name: str) -> np.ndarray:
+        """Paper §4.3 avg normalized turnaround time per mix, shape (M,)."""
+        return np.mean(self.baseline_ipc / self.ipc[name], axis=-1)
+
+    def geomean_speedup(self, name: str) -> float:
+        return float(np.exp(np.mean(np.log(self.weighted_speedup(name)))))
+
+    def summary(self) -> Dict[str, float]:
+        """Geomean weighted speedup per manager over all mixes."""
+        return {name: round(self.geomean_speedup(name), 4)
+                for name in self.manager_names}
+
+
+def run_sweep(
+    mixes: Sequence[Sequence[str]],
+    managers: Optional[Sequence[str]] = None,
+    total_ms: float = 100.0,
+    params: Optional[CBPParams] = None,
+    config: Optional[CMPConfig] = None,
+) -> SweepResult:
+    """Evaluate Table-3 managers over many mixes in batched device calls.
+
+    Args:
+      mixes: equal-size workload mixes (lists of app names) — e.g.
+        ``list(WORKLOADS.values())`` or :func:`repro.sim.random_mixes`.
+      managers: manager names (default: all ten ``MANAGER_NAMES``).
+      total_ms / params / config: as in ``managers.run_manager``.
+    """
+    plant = BatchedCMPPlant(mixes, config)
+    params = params or CBPParams()
+    names = list(MANAGER_NAMES) if managers is None else list(managers)
+    unknown = [n for n in names if n != "CPpf" and n not in TABLE3_MODES]
+    if unknown:
+        raise ValueError(
+            f"unknown managers {unknown}; valid: {MANAGER_NAMES}")
+    ipc: Dict[str, np.ndarray] = {}
+    final: Dict[str, Allocation] = {}
+    for name in names:
+        if name == "CPpf":
+            ipc[name], final[name] = _run_cppf_batched(
+                plant, total_ms, params)
+            continue
+        cache_mode, bw_mode, pf_mode = TABLE3_MODES[name]
+        coord = BatchedCoordinator(
+            plant, params=params, cache_mode=cache_mode,
+            bandwidth_mode=bw_mode, prefetch_mode=pf_mode)
+        coord.run(total_ms)
+        ipc[name] = coord.mean_ipc()
+        final[name] = coord.alloc
+    return SweepResult(
+        manager_names=names,
+        mixes=plant.mixes,
+        ipc=ipc,
+        final_alloc=final,
+        baseline_ipc=baseline_ipc_batched(plant),
+    )

@@ -59,3 +59,46 @@ def random_workloads(n_workloads: int, apps_per_workload: int = 4,
                                             size=apps_per_workload)]
         for _ in range(n_workloads)
     ]
+
+
+# Sensitivity-class buckets (paper Fig. 2 / the _TABLE blocks in apps.py),
+# used to draw Table-2-like mixes that always exercise all three resources.
+_CLASS_BUCKETS = {
+    "CS-BS-PS": ["mcf", "leslie3d", "soplex", "sphinx3", "gcc", "dealII"],
+    "CS-BS": ["xalancbmk", "omnetpp", "bzip2", "gobmk", "perlbench",
+              "calculix", "hmmer", "astar"],
+    "BS-PS": ["lbm", "libquantum", "milc", "bwaves", "zeusmp", "GemsFDTD"],
+    "CS": ["h264ref", "tonto", "gromacs"],
+    "BS": ["cactusADM", "wrf", "sjeng"],
+    "I": ["povray", "gamess", "namd"],
+}
+
+
+def random_mixes(n_mixes: int, apps_per_mix: int = 16, seed: int = 0,
+                 balanced: bool = True) -> List[List[str]]:
+    """Random 16-app mixes for the Table-3 sweep (``repro.sim.sweep``).
+
+    With ``balanced=True`` (default) each mix draws at least one application
+    from every sensitivity class before filling uniformly, mirroring the
+    composition of the paper's Table 2 mixes — every mix then has cache-,
+    bandwidth- and prefetch-sensitive clients for the managers to trade off.
+    Uniform draws (``balanced=False``) reproduce the §2.3 potential-study
+    style instead.
+    """
+    from repro.sim.apps import APP_NAMES
+    if balanced and apps_per_mix < len(_CLASS_BUCKETS):
+        raise ValueError(
+            f"balanced mixes need >= {len(_CLASS_BUCKETS)} apps per mix")
+    rng = np.random.default_rng(seed)
+    mixes: List[List[str]] = []
+    for _ in range(n_mixes):
+        apps: List[str] = []
+        if balanced:
+            for bucket in _CLASS_BUCKETS.values():
+                apps.append(bucket[int(rng.integers(0, len(bucket)))])
+        fill = apps_per_mix - len(apps)
+        apps.extend(APP_NAMES[i]
+                    for i in rng.integers(0, len(APP_NAMES), size=fill))
+        rng.shuffle(apps)
+        mixes.append(apps)
+    return mixes

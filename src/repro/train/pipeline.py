@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed import shard_map
+
 
 def pipeline_apply(
     stage_fn: Callable,      # (stage_params, x) -> x
@@ -79,7 +81,5 @@ def pipeline_apply(
         jax.tree.map(lambda _: P(axis), stage_params),
         P(),          # microbatch stream replicated across stages
     )
-    fn = jax.shard_map(
-        worker, mesh=mesh, in_specs=in_specs, out_specs=P(),
-        check_vma=False)
+    fn = shard_map(worker, mesh=mesh, in_specs=in_specs, out_specs=P())
     return fn(stage_params, x)

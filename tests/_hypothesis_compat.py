@@ -1,0 +1,89 @@
+"""Hypothesis import shim for the tier-1 suite.
+
+``hypothesis`` is an optional dependency: when it is installed the real
+library is re-exported unchanged, and when it is missing a tiny fallback
+runs each ``@given`` test over a fixed, seeded set of drawn examples (the
+same spirit as hypothesis' explicit-example mode — deterministic, no
+shrinking).  Test modules import ``given``/``settings``/``assume``/``st``
+from here instead of from ``hypothesis`` so the suite always collects.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import assume, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Unsatisfied(Exception):
+        """Raised by :func:`assume` to discard the current example."""
+
+    def assume(condition):
+        if not condition:
+            raise _Unsatisfied
+        return True
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                size = int(rng.integers(min_size, max_size + 1))
+                return [elements.draw(rng) for _ in range(size)]
+            return _Strategy(draw)
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = np.random.default_rng(0)
+                ran = attempts = 0
+                while ran < n and attempts < 20 * n:
+                    attempts += 1
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **{**kwargs, **drawn})
+                    except _Unsatisfied:
+                        continue
+                    ran += 1
+                if ran == 0:
+                    # Mirror hypothesis' Unsatisfiable: a test that never
+                    # executed an example must not pass silently.
+                    raise AssertionError(
+                        f"{fn.__name__}: assume() rejected all "
+                        f"{attempts} drawn examples")
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            # Drawn arguments must not look like pytest fixtures.
+            runner.__signature__ = inspect.Signature(
+                p for p in inspect.signature(fn).parameters.values()
+                if p.name not in strategies)
+            return runner
+        return deco

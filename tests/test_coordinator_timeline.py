@@ -1,0 +1,80 @@
+"""Fig. 8 schedule accounting regression tests (paper §3.3).
+
+The coordinator timeline is now data (:func:`repro.core.fig8_schedule`)
+executed by both the scalar and the batched coordinator; these tests pin
+its accounting: sampling periods plus remainders sum exactly to
+``total_ms``, durations are non-negative, and the executed history agrees
+with the declared schedule for both DYNAMIC and pinned prefetch modes.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CBPCoordinator, CBPParams, PrefetchMode, fig8_schedule
+from repro.sim.runner import CMPPlant
+
+PF_MODES = [PrefetchMode.DYNAMIC, PrefetchMode.OFF, PrefetchMode.ON]
+
+
+@pytest.mark.parametrize("prefetch_dynamic", [True, False])
+@pytest.mark.parametrize("total_ms", [10.0, 25.0, 40.0, 100.0])
+def test_schedule_durations_sum_to_total(total_ms, prefetch_dynamic):
+    params = CBPParams()
+    segments = fig8_schedule(total_ms, params, prefetch_dynamic)
+    assert all(s.duration_ms >= 0.0 for s in segments)
+    assert sum(s.duration_ms for s in segments) == pytest.approx(total_ms)
+
+
+@pytest.mark.parametrize("prefetch_dynamic", [True, False])
+def test_schedule_structure(prefetch_dynamic):
+    params = CBPParams()
+    segments = fig8_schedule(100.0, params, prefetch_dynamic)
+    n_intervals = int(100.0 / params.reconfiguration_interval_ms)
+    kinds = [s.kind for s in segments]
+    # One reconfiguration boundary between consecutive intervals.
+    assert kinds.count("reconfigure") == n_intervals - 1
+    assert all(s.duration_ms == 0.0 for s in segments
+               if s.kind == "reconfigure")
+    if prefetch_dynamic:
+        # Every interval starts with an off/on sampling pair.
+        assert kinds.count("sample_off") == n_intervals
+        assert kinds.count("sample_on") == n_intervals
+        sample_ms = sum(s.duration_ms for s in segments
+                        if s.kind.startswith("sample"))
+        assert sample_ms == pytest.approx(
+            2 * params.prefetch_sampling_period_ms * n_intervals)
+    else:
+        assert "sample_off" not in kinds and "sample_on" not in kinds
+        assert kinds.count("run") == n_intervals
+
+
+@pytest.mark.parametrize("pf_mode", PF_MODES)
+def test_coordinator_history_matches_schedule(pf_mode):
+    """CBPCoordinator.run executes exactly the declared timeline."""
+    total_ms = 35.0
+    plant = CMPPlant(["lbm", "xalancbmk"])
+    coord = CBPCoordinator(plant, prefetch_mode=pf_mode)
+    coord.run(total_ms)
+
+    durations = [rec.duration_ms for rec in coord.history]
+    assert all(d > 0.0 for d in durations)
+    assert sum(durations) == pytest.approx(total_ms)
+    # t_ms stamps are cumulative and start at zero.
+    t = 0.0
+    for rec in coord.history:
+        assert rec.t_ms == pytest.approx(t)
+        t += rec.duration_ms
+
+    expected = [s.duration_ms for s in fig8_schedule(
+        total_ms, coord.params, pf_mode == PrefetchMode.DYNAMIC)
+        if s.duration_ms > 0.0]
+    assert durations == pytest.approx(expected)
+
+
+@pytest.mark.parametrize("pf_mode", PF_MODES)
+def test_mean_ipc_is_time_weighted_over_full_run(pf_mode):
+    plant = CMPPlant(["lbm", "xalancbmk"])
+    coord = CBPCoordinator(plant, prefetch_mode=pf_mode)
+    coord.run(30.0)
+    manual = sum(rec.stats.ipc * rec.duration_ms for rec in coord.history)
+    manual = manual / sum(rec.duration_ms for rec in coord.history)
+    np.testing.assert_allclose(coord.mean_ipc(), manual)

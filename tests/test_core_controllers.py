@@ -1,8 +1,7 @@
 """Unit + property tests for the CBP controllers (paper §3.2)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     SampledATD,
@@ -147,7 +146,7 @@ def test_throttle_threshold():
     thr=st.floats(1.0, 1.5),
 )
 def test_throttle_property(ipc, speedup, thr):
-    from hypothesis import assume
+    from _hypothesis_compat import assume
     assume(abs(speedup - thr) > 1e-6)  # avoid the float knife-edge
     on = throttle_decision(
         np.array([ipc * speedup]), np.array([ipc]), speedup_threshold=thr)

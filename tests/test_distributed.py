@@ -22,13 +22,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.distributed import set_dp_axes, use_mesh
+from repro.distributed import make_mesh, set_dp_axes, use_mesh
 from repro.launch import shardings as sh
 from repro.models import build
 from repro.train.step import TrainStepConfig, build_train_step
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 results = {}
 for arch in ["qwen3-8b", "qwen3-moe-30b-a3b", "mamba2-1.3b"]:
     cfg = configs.get_smoke(arch)

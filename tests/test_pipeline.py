@@ -15,10 +15,10 @@ import json
 import jax
 import jax.numpy as jnp
 import numpy as np
+from repro.distributed import make_mesh
 from repro.train.pipeline import pipeline_apply
 
-mesh = jax.make_mesh((2, 2), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("pod", "data"))
 
 D, L, S = 16, 4, 2          # 4 layers, 2 stages
 rng = jax.random.PRNGKey(0)

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify wrapper — the single entry point used by CI
+# (.github/workflows/ci.yml) and by ROADMAP.md.  Extra args are forwarded
+# to pytest (e.g. ./tools/run_tests.sh tests/test_sim_sweep.py -k parity).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"
