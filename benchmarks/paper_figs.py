@@ -180,7 +180,7 @@ def fig5_potential(n_workloads: int = 640) -> None:
 
 
 def fig9_fig10_main(total_ms: float = 100.0) -> Dict[str, Dict[str, float]]:
-    """Main evaluation: weighted speedup + ANTT, w1..w14 x 10 managers.
+    """Main evaluation: weighted speedup + ANTT, w1..w14 x all managers.
 
     Runs on the batched sweep substrate (``repro.sim.sweep``): all 14 mixes
     are evaluated per manager in single jitted device calls.
@@ -250,40 +250,46 @@ def fig11_case_study() -> None:
 
 def fig12_sensitivity() -> None:
     """Design-parameter sensitivity: reconfiguration interval, cache size,
-    min-bandwidth, prefetch sampling period (sweep substrate)."""
+    min-bandwidth, prefetch sampling period.
+
+    Each parameter family is ONE ``run_sweep(param_grid=...)`` call: the
+    CBPParams axis batches on device (same-schedule params share a single
+    batch; schedule-distinct ones run as separate batches of the same
+    sweep).  Only the cache-size axis needs separate calls, because it
+    changes ``CMPConfig`` (model capacity), not ``CBPParams``.
+    """
     apps = WORKLOADS["w1"]
 
-    def cbp_ws(params: CBPParams, cache_units: int = 256,
-               llc_extra: float = 0.0) -> float:
+    def cbp_ws(grid: List[CBPParams], cache_units: int = 256,
+               llc_extra: float = 0.0) -> List[float]:
         cfgS = CMPConfig(total_cache_units=cache_units,
                          llc_extra_cycles=llc_extra)
         res = run_sweep([apps], managers=["CBP"], total_ms=100.0,
-                        params=params, config=cfgS)
-        return float(res.weighted_speedup("CBP")[0])
+                        param_grid=grid, config=cfgS)
+        ws = np.asarray(res.weighted_speedup("CBP"))[:, 0]
+        return [round(float(x), 3) for x in ws]
 
     with timer() as t:
-        interval = {
-            f"{ms}ms": round(cbp_ws(CBPParams(
-                reconfiguration_interval_ms=ms,
-                prefetch_interval_ms=ms)), 3)
-            for ms in (1.0, 10.0, 100.0)
-        }
+        ivals = (1.0, 10.0, 100.0)
+        interval = dict(zip(
+            (f"{ms}ms" for ms in ivals),
+            cbp_ws([CBPParams(reconfiguration_interval_ms=ms,
+                              prefetch_interval_ms=ms) for ms in ivals])))
         cache = {
-            "512kB_tile": round(cbp_ws(CBPParams()), 3),
+            "512kB_tile": cbp_ws([CBPParams()])[0],
             # 1 MB tiles: double capacity, +4 cycles LLC latency (CACTI)
-            "1MB_tile": round(cbp_ws(CBPParams(), cache_units=512,
-                                     llc_extra=4.0), 3),
+            "1MB_tile": cbp_ws([CBPParams()], cache_units=512,
+                               llc_extra=4.0)[0],
         }
-        minbw = {
-            f"{mb}GBs": round(cbp_ws(CBPParams(
-                min_bandwidth_allocation=mb)), 3)
-            for mb in (0.5, 1.0)
-        }
-        sampling = {
-            f"{sp}ms": round(cbp_ws(CBPParams(
-                prefetch_sampling_period_ms=sp)), 3)
-            for sp in (0.25, 0.5, 1.0)
-        }
+        mbs = (0.5, 1.0)
+        minbw = dict(zip(
+            (f"{mb}GBs" for mb in mbs),
+            cbp_ws([CBPParams(min_bandwidth_allocation=mb) for mb in mbs])))
+        sps = (0.25, 0.5, 1.0)
+        sampling = dict(zip(
+            (f"{sp}ms" for sp in sps),
+            cbp_ws([CBPParams(prefetch_sampling_period_ms=sp)
+                    for sp in sps])))
     emit("fig12_sensitivity", t.seconds, {
         "reconfig_interval": interval,
         "paper_interval": "10ms best trade-off",

@@ -16,7 +16,12 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, paper_figs, roofline_report
+    from benchmarks import (
+        kernel_bench,
+        paper_figs,
+        roofline_report,
+        scenario_report,
+    )
 
     benches = {
         "fig1": paper_figs.fig1_motivation,
@@ -28,6 +33,8 @@ def main() -> None:
         "fig9_10": paper_figs.fig9_fig10_main,
         "fig11": paper_figs.fig11_case_study,
         "fig12": paper_figs.fig12_sensitivity,
+        "scenario_diversity": (lambda: scenario_report.scenario_diversity(
+            8 if args.quick else 32)),
         "kernel_flash_attention": kernel_bench.flash_attention_bench,
         "kernel_flash_decode": kernel_bench.flash_decode_bench,
         "kernel_ssd_scan": kernel_bench.ssd_scan_bench,

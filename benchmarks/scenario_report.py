@@ -1,0 +1,61 @@
+"""Scenario-diversity report: generated mixes beyond the paper's w1-w14.
+
+``random_mixes`` draws class-balanced 16-app mixes (every sensitivity
+class of paper Fig. 2 represented); one device-resident sweep evaluates
+every Table-3 manager over all of them and this report summarizes how the
+paper's headline ordering holds up across the broader scenario space —
+spread of the CBP weighted speedup, win rate against the best
+two-technique manager, and which generated mixes are hardest.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.sim import MANAGER_NAMES, random_mixes, run_sweep
+from repro.sim.workloads import _CLASS_BUCKETS
+
+PAIR_MANAGERS = ("bw+pref", "bw+cache", "cache+pref", "CPpf")
+
+
+def scenario_diversity(n_mixes: int = 32, n_apps: int = 16, seed: int = 0,
+                       total_ms: float = 40.0) -> Dict[str, object]:
+    """Sweep ``n_mixes`` generated scenarios x all managers in one call."""
+    with timer() as t:
+        mixes = random_mixes(n_mixes, n_apps, seed=seed)
+        res = run_sweep(mixes, total_ms=total_ms)
+        ws = {m: np.asarray(res.weighted_speedup(m)) for m in MANAGER_NAMES}
+        cbp = ws["CBP"]
+        best_pair = np.max([ws[m] for m in PAIR_MANAGERS], axis=0)
+
+        distinct = sorted({a for mix in mixes for a in mix})
+        class_cover = {
+            cls: sum(any(a in bucket for a in mix) for mix in mixes)
+            for cls, bucket in _CLASS_BUCKETS.items()
+        }
+        hardest = int(np.argmin(cbp))
+        derived = {
+            "n_mixes": n_mixes,
+            "n_apps_per_mix": n_apps,
+            "distinct_apps": len(distinct),
+            "class_coverage_mixes": class_cover,
+            "geomean_ws": {
+                m: round(float(np.exp(np.mean(np.log(ws[m])))), 3)
+                for m in MANAGER_NAMES},
+            "cbp_ws_p10_p50_p90": [
+                round(float(np.percentile(cbp, p)), 3) for p in (10, 50, 90)],
+            "cbp_win_rate_vs_best_pair": round(
+                float(np.mean(cbp >= best_pair - 1e-9)), 3),
+            "cbp_beats_baseline_rate": round(float(np.mean(cbp > 1.0)), 3),
+            "hardest_mix_index": hardest,
+            "hardest_mix_cbp_ws": round(float(cbp[hardest]), 3),
+            "hardest_mix_apps": mixes[hardest],
+        }
+    emit("scenario_diversity", t.seconds, derived)
+    return derived
+
+
+if __name__ == "__main__":
+    scenario_diversity()

@@ -1,0 +1,121 @@
+"""Device-resident sweep smoke: the CI gate for the batched allocator path.
+
+Runs an all-manager x many-mix sweep and asserts the contract that makes
+sweeps scale: the batched path performs ZERO per-mix host allocator calls
+(counter hook on the numpy ``lookahead_allocate``).  The sweep runs twice;
+the second, jit-warm wall time is the primary trajectory metric (the cold
+run mostly measures XLA compilation) and is checked against the committed
+``results/bench/sweep_smoke.json`` record — a regression beyond
+``SWEEP_SMOKE_BUDGET_X`` (default 3x, slack for machine variance) fails
+the smoke.  The refreshed record keeps any prior ``--compare-host``
+fields, so plain CI runs don't clobber the recorded host-path evidence.
+
+``--compare-host`` additionally times the same sweep with the allocator
+forced onto the host (``CMPConfig(allocator_backend="numpy")`` — the PR 1
+per-mix Python loop) and records the speedup.  CI skips the comparison to
+stay inside its 60 s budget; run it locally when touching the allocator.
+
+    PYTHONPATH=src python -m benchmarks.sweep_smoke [--compare-host]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from benchmarks.common import RESULTS, emit
+from repro.core import allocator_calls
+from repro.sim import MANAGER_NAMES, random_mixes, run_sweep
+from repro.sim.runner import CMPConfig
+
+DEFAULT_MIXES = 32
+DEFAULT_TOTAL_MS = 100.0
+
+#: Prior-record fields preserved across runs that skip ``--compare-host``.
+HOST_FIELDS = ("host_allocator_calls_host_path", "wall_s_host_alloc",
+               "allocator_speedup_warm")
+
+
+def _prior_record() -> dict:
+    path = RESULTS / "sweep_smoke.json"
+    if not path.exists():
+        return {}
+    try:
+        return json.loads(path.read_text()).get("derived", {})
+    except (ValueError, OSError):
+        return {}
+
+
+def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
+         compare_host: bool = False) -> None:
+    prior = _prior_record()
+    mixes = random_mixes(n_mixes, 16, seed=1)
+
+    t0 = time.monotonic()
+    before = allocator_calls()
+    res = run_sweep(mixes, total_ms=total_ms)
+    wall_cold = time.monotonic() - t0
+    host_calls = allocator_calls() - before
+    # Hard failures, not asserts: this is a CI gate and must still trip
+    # under python -O / PYTHONOPTIMIZE.
+    if host_calls != 0:
+        raise RuntimeError(
+            f"device-resident sweep made {host_calls} host allocator calls")
+    summary = res.summary()
+    if not summary["CBP"] > summary["baseline"]:
+        raise RuntimeError(f"CBP does not beat baseline: {summary}")
+
+    # Second run with warm jit caches: the compile-free trajectory metric.
+    t0 = time.monotonic()
+    run_sweep(mixes, total_ms=total_ms)
+    wall_warm = time.monotonic() - t0
+
+    derived = {
+        "n_mixes": n_mixes,
+        "n_managers": len(MANAGER_NAMES),
+        "total_ms": total_ms,
+        "host_allocator_calls": host_calls,
+        "wall_s_device_alloc_warm": round(wall_warm, 3),
+        "wall_s_device_alloc_cold": round(wall_cold, 3),
+        "cbp_geomean_ws": summary["CBP"],
+    }
+    if compare_host:
+        cfg = CMPConfig(allocator_backend="numpy")
+        t0 = time.monotonic()
+        before = allocator_calls()
+        run_sweep(mixes, total_ms=total_ms, config=cfg)
+        wall_host = time.monotonic() - t0
+        derived.update({
+            "host_allocator_calls_host_path": allocator_calls() - before,
+            "wall_s_host_alloc": round(wall_host, 3),
+            "allocator_speedup_warm": round(
+                wall_host / max(wall_warm, 1e-9), 2),
+        })
+    else:
+        derived.update({k: prior[k] for k in HOST_FIELDS if k in prior})
+
+    # Trajectory gate BEFORE refreshing the record: a regressed run must
+    # not re-baseline the tracked JSON it just failed against.
+    budget_x = float(os.environ.get("SWEEP_SMOKE_BUDGET_X", "3.0"))
+    prior_warm = prior.get("wall_s_device_alloc_warm")
+    comparable = (prior.get("n_mixes") == n_mixes
+                  and prior.get("total_ms") == total_ms)
+    if prior_warm and comparable and wall_warm > budget_x * prior_warm:
+        raise RuntimeError(
+            f"sweep wall-time regression: warm {wall_warm:.2f}s vs "
+            f"recorded {prior_warm:.2f}s (budget {budget_x}x)")
+    # Non-default shapes go to a scratch record so local experiments never
+    # clobber the committed 32-mix baseline.
+    default_shape = (n_mixes == DEFAULT_MIXES and total_ms == DEFAULT_TOTAL_MS)
+    emit("sweep_smoke" if default_shape else "sweep_smoke_custom",
+         wall_warm, derived)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mixes", type=int, default=DEFAULT_MIXES)
+    ap.add_argument("--total-ms", type=float, default=DEFAULT_TOTAL_MS)
+    ap.add_argument("--compare-host", action="store_true")
+    args = ap.parse_args()
+    main(args.mixes, args.total_ms, args.compare_host)

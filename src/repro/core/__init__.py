@@ -9,7 +9,13 @@ adaptation — see DESIGN.md §2).
 """
 from repro.core.atd import SampledATD, StackDistanceMonitor
 from repro.core.bandwidth_controller import BandwidthController, allocate_bandwidth
-from repro.core.cache_controller import CacheController, lookahead_allocate
+from repro.core.cache_controller import (
+    CacheController,
+    allocator_calls,
+    cppf_allocate,
+    lookahead_allocate,
+    reset_allocator_calls,
+)
 from repro.core.coordinator import (
     CBPCoordinator,
     Plant,
@@ -25,7 +31,10 @@ __all__ = [
     "BandwidthController",
     "allocate_bandwidth",
     "CacheController",
+    "allocator_calls",
+    "cppf_allocate",
     "lookahead_allocate",
+    "reset_allocator_calls",
     "CBPCoordinator",
     "Plant",
     "ScheduleSegment",

@@ -23,19 +23,22 @@ def allocate_bandwidth(
         unit — only proportions matter).  Leading axes (e.g. the sweep
         runner's mix axis) each get an independent allocation.
       total_bandwidth: capacity to distribute (GB/s).
-      min_allocation: per-client floor (GB/s).
+      min_allocation: per-client floor (GB/s) — a scalar, or an array
+        broadcastable against the leading batch axes (shape ``(..., 1)``),
+        which is how ``run_sweep(param_grid=...)`` batches over
+        ``CBPParams.min_bandwidth_allocation``.
 
     Returns:
       (..., n) float allocation summing to ``total_bandwidth`` per batch.
     """
     delay = np.asarray(queuing_delay, dtype=np.float64)
     n = delay.shape[-1]
-    if min_allocation * n > total_bandwidth:
+    min_alloc = np.asarray(min_allocation, dtype=np.float64)
+    if np.any(min_alloc * n > total_bandwidth):
         raise ValueError("min_allocation * n exceeds total bandwidth")
 
-    # line 2: remaining after floors
-    remaining = total_bandwidth - min_allocation * n
-    alloc = np.full(delay.shape, min_allocation, dtype=np.float64)  # line 5
+    # line 2: remaining after floors (line 5: every client gets the floor)
+    remaining = total_bandwidth - min_alloc * n
 
     total_delay = delay.sum(axis=-1, keepdims=True)  # line 4
     # lines 7-9: proportional share of the remainder; no one queued ->
@@ -43,7 +46,7 @@ def allocate_bandwidth(
     share = np.where(total_delay > 0,
                      delay / np.where(total_delay > 0, total_delay, 1.0),
                      1.0 / n)
-    return alloc + share * remaining
+    return min_alloc + share * remaining
 
 
 class BandwidthController:

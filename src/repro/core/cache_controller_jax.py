@@ -1,0 +1,270 @@
+"""Batched JAX port of the UCP Lookahead allocator (paper §3.2.1).
+
+:func:`lookahead_allocate` takes ``(..., n, total_units + 1)`` utility
+curves and returns ``(..., n)`` integer allocations — the whole batch runs
+as ONE jitted device call, a bounded-trip ``lax.while_loop`` greedy over a
+masked marginal-utility argmax.  This is what lets the sweep substrate
+(:mod:`repro.sim.sweep`) reconfigure every mix of a Table-3 sweep without a
+single per-mix host allocator call.
+
+Parity contract: bit-identical to the numpy golden reference
+(:func:`repro.core.cache_controller.lookahead_allocate`) away from tie
+knife-edges, under the shared deterministic tie-breaks (lowest client index
+wins equal marginal utility; smallest step wins within a client; the
+zero-utility spread orders by remaining gain with a stable sort).  Enforced
+by ``tests/test_cache_controller_jax.py``.  Change the numpy reference
+first, then mirror here.
+
+:func:`lookahead_allocate_masked` is the CPpf variant
+(:func:`repro.core.cache_controller.cppf_allocate`): inactive clients are
+pinned at the floor and the greedy runs over the active subset, matching
+the scalar subset call exactly (including the subset-local spread column).
+
+``min_units`` may vary per batch element (a traced array), which is how
+``run_sweep(param_grid=...)`` batches over ``CBPParams.min_ways``.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:  # pragma: no cover - present on every supported JAX
+    from jax.experimental import enable_x64 as _enable_x64
+except ImportError:  # pragma: no cover
+    _enable_x64 = None
+
+
+def _x64_context():
+    """The greedy compares float64 marginal utilities; run in x64 so the
+    bit-parity contract with the numpy reference holds."""
+    if _enable_x64 is None:
+        if not jax.config.jax_enable_x64:
+            # Without x64 the float64 inputs would silently downcast and
+            # the greedy could round differently from the numpy reference
+            # — refuse rather than break the parity contract quietly.
+            raise RuntimeError(
+                "batched Lookahead needs float64: this JAX has no "
+                "jax.experimental.enable_x64 and jax_enable_x64 is off; "
+                "enable x64 or use CacheController(backend='numpy')")
+        return contextlib.nullcontext()
+    return _enable_x64()
+
+
+@functools.partial(jax.jit, static_argnames=("total_units",))
+def _greedy_core(
+    curves: jnp.ndarray,     # (B, n, U + 1) float64
+    min_units: jnp.ndarray,  # (B,) int
+    active: jnp.ndarray,     # (B, n) bool
+    remaining: jnp.ndarray,  # (B,) int — top curve column per batch element
+    total_units: int,
+):
+    """Bounded-trip while_loop greedy over cached per-client best steps.
+
+    The reference recomputes every client's best ``(mu, k)`` each greedy
+    iteration, but between iterations only the stepped client's curve
+    position changes; any other cached best stays the exact
+    argmax-with-tie-breaks as long as its ``k`` still fits the shrunken
+    balance cap (the argmax over a subset that still contains the old
+    argmax is unchanged).  So: one full ``(B, n, U)`` pass prefills the
+    cache, then each trip refreshes at most ONE stale client per batch
+    element with ``(B, U)``-sized work — ~n-fold less memory traffic per
+    trip, which is what the CPU while_loop is bound by — and rows with a
+    fully valid cache take their greedy step in the same trip.
+
+    A batch element whose best mu goes non-positive is *stuck*: its
+    allocation no longer changes, so its mus can't either — the loop
+    retires it and the reference's zero-utility spread (distribute the
+    whole balance by remaining potential gain) is applied ONCE, after the
+    loop, to every retired element.
+    """
+    B, n, _ = curves.shape
+    U = total_units
+    ks = jnp.arange(1, U + 1, dtype=jnp.int32)                 # (U,)
+    ksf = ks.astype(curves.dtype)
+    neg_inf = jnp.array(-jnp.inf, curves.dtype)
+    iota_n = jnp.arange(n, dtype=jnp.int32)
+
+    min32 = min_units.astype(jnp.int32)
+    alloc0 = jnp.broadcast_to(min32[:, None], (B, n))
+    balance0 = U - n * min32
+    rem32 = remaining.astype(jnp.int32)
+    stuck0 = jnp.zeros((B,), dtype=bool)
+
+    def caps(alloc, balance):
+        """Per-client step cap: k <= balance, alloc + k inside the
+        (sub)curve, inactive clients excluded."""
+        cap = jnp.minimum(balance[:, None], rem32[:, None] - alloc)
+        return jnp.where(active, cap, 0)                        # (B, n)
+
+    # ---- prefill: every client's best (mu, k), one full pass --------- #
+    cap0 = caps(alloc0, balance0)
+    idx = alloc0[:, :, None] + ks[None, None, :]                # (B, n, U)
+    base = jnp.take_along_axis(curves, alloc0[:, :, None], axis=-1)
+    gain = jnp.take_along_axis(curves, jnp.minimum(idx, U), axis=-1) - base
+    mus = jnp.where(ks[None, None, :] <= cap0[:, :, None],
+                    gain / ksf, neg_inf)
+    # argmax picks the FIRST max -> smallest k: the reference tie-break.
+    k_c0 = jnp.where(cap0 > 0,
+                     jnp.argmax(mus, axis=-1).astype(jnp.int32) + 1, 0)
+    mu_c0 = jnp.where(cap0 > 0, jnp.max(mus, axis=-1), neg_inf)
+    dirty0 = jnp.zeros((B, n), dtype=bool)
+
+    def cond(state):
+        _alloc, balance, stuck, _mu, _k, _dirty, it = state
+        # Trip bound: <= U greedy steps per row, and between consecutive
+        # steps each client refreshes at most once -> (n + 2) * U is safe.
+        return (it < (n + 2) * U) & jnp.any((balance > 0) & ~stuck)
+
+    def body(state):
+        alloc, balance, stuck, mu_c, k_c, dirty, it = state
+        cap_now = caps(alloc, balance)
+        # ---- refresh one stale cache entry per row ------------------- #
+        invalid = active & (dirty | (k_c > cap_now))
+        n_inv = jnp.sum(invalid, axis=-1)                       # (B,)
+        j = jnp.argmax(invalid, axis=-1).astype(jnp.int32)      # first stale
+        has_inv = n_inv > 0
+        c_j = jnp.take_along_axis(curves, j[:, None, None], axis=1)[:, 0, :]
+        have_j = jnp.take_along_axis(alloc, j[:, None], -1)[:, 0]
+        cap_j = jnp.take_along_axis(cap_now, j[:, None], -1)[:, 0]
+        idx_j = have_j[:, None] + ks[None, :]                   # (B, U)
+        base_j = jnp.take_along_axis(c_j, have_j[:, None], -1)
+        gain_j = jnp.take_along_axis(c_j, jnp.minimum(idx_j, U), -1) - base_j
+        mu_vec = jnp.where(ks[None, :] <= cap_j[:, None],
+                           gain_j / ksf, neg_inf)
+        k_j = jnp.where(cap_j > 0,
+                        jnp.argmax(mu_vec, axis=-1).astype(jnp.int32) + 1, 0)
+        mu_j = jnp.where(cap_j > 0, jnp.max(mu_vec, axis=-1), neg_inf)
+        at_j = (iota_n[None, :] == j[:, None]) & has_inv[:, None]
+        mu_c = jnp.where(at_j, mu_j[:, None], mu_c)
+        k_c = jnp.where(at_j, k_j[:, None], k_c)
+        dirty = dirty & ~at_j
+
+        # ---- greedy step for rows whose cache is now fully valid ----- #
+        # argmax over clients picks the FIRST max -> lowest client index.
+        i_best = jnp.argmax(mu_c, axis=-1).astype(jnp.int32)    # (B,)
+        mu_sel = jnp.max(mu_c, axis=-1)
+        k_sel = jnp.take_along_axis(k_c, i_best[:, None], -1)[:, 0]
+        live = (balance > 0) & ~stuck
+        ready = live & (n_inv <= 1)
+        do_greedy = ready & (mu_sel > 0.0)
+        at_i = (iota_n[None, :] == i_best[:, None]) & do_greedy[:, None]
+        alloc = alloc + jnp.where(at_i, k_sel[:, None], 0)
+        balance = balance - jnp.where(do_greedy, k_sel, 0)
+        dirty = dirty | at_i
+        stuck = stuck | (ready & ~(mu_sel > 0.0))
+        return alloc, balance, stuck, mu_c, k_c, dirty, it + 1
+
+    alloc, balance, _stuck, _mu, _k, _dirty, _it = jax.lax.while_loop(
+        cond, body,
+        (alloc0, balance0, stuck0, mu_c0, k_c0, dirty0, jnp.int32(0)))
+
+    # ---- zero-utility spread (reference's even-spread branch) -------- #
+    # Runs once, outside the loop, for elements retired with balance left.
+    cur = jnp.take_along_axis(curves, alloc[:, :, None], -1)[:, :, 0]
+    top = jnp.take_along_axis(
+        curves, jnp.broadcast_to(remaining[:, None, None], (B, n, 1)),
+        -1)[:, :, 0]
+    key = jnp.where(active, -(top - cur), jnp.inf)
+    order = jnp.argsort(key, axis=-1, stable=True)
+    rank = jnp.argsort(order, axis=-1)          # inverse permutation
+    n_act = jnp.maximum(jnp.sum(active, axis=-1), 1)            # (B,)
+    share = (balance[:, None] // n_act[:, None]
+             + (rank < (balance % n_act)[:, None]))
+    need = balance > 0
+    alloc = jnp.where((need[:, None]) & active, alloc + share, alloc)
+    return alloc
+
+
+def _validate(curves: np.ndarray, total_units: int,
+              min_units: np.ndarray) -> None:
+    if curves.shape[-1] != total_units + 1:
+        raise ValueError(
+            f"utility curves must have {total_units + 1} points, "
+            f"got {curves.shape[-1]}")
+    n = curves.shape[-2]
+    if np.any(min_units * n > total_units):
+        raise ValueError("min_units * n exceeds capacity")
+
+
+def _flatten(curves: np.ndarray, min_units) -> tuple:
+    batch_shape = curves.shape[:-2]
+    flat = curves.reshape((-1,) + curves.shape[-2:])
+    mus = np.broadcast_to(
+        np.asarray(min_units, dtype=np.int64), batch_shape).reshape(-1)
+    if flat.shape[0] == 0:
+        raise ValueError("empty batch")
+    return batch_shape, flat, mus
+
+
+def lookahead_allocate(
+    utility_curves,
+    total_units: int,
+    min_units=4,
+) -> np.ndarray:
+    """Batched Lookahead: ``(..., n, U+1)`` curves -> ``(..., n)`` ints.
+
+    Drop-in batched counterpart of the numpy reference; ``min_units`` may
+    be a scalar or broadcast against the leading batch axes.
+    """
+    curves = np.asarray(utility_curves, dtype=np.float64)
+    if curves.ndim < 2:
+        raise ValueError("utility curves must be at least 2-D")
+    batch_shape, flat, mus = _flatten(curves, min_units)
+    _validate(curves, total_units, mus)
+    B, n, _ = flat.shape
+    with _x64_context():
+        out = _greedy_core(
+            jnp.asarray(flat, dtype=jnp.float64),
+            jnp.asarray(mus),
+            jnp.ones((B, n), dtype=bool),
+            jnp.full((B,), total_units, dtype=jnp.int64),
+            total_units=int(total_units))
+        out = np.asarray(out)
+    assert (out.sum(axis=-1) == total_units).all()
+    return out.reshape(batch_shape + (n,)).astype(np.int64)
+
+
+def lookahead_allocate_masked(
+    utility_curves,
+    total_units: int,
+    min_units,
+    active,
+) -> np.ndarray:
+    """Batched CPpf allocation: pin inactive clients at the floor, UCP over
+    the active subset (bit-parity with
+    :func:`repro.core.cache_controller.cppf_allocate` per batch element).
+    """
+    curves = np.asarray(utility_curves, dtype=np.float64)
+    if curves.ndim < 2:
+        raise ValueError("utility curves must be at least 2-D")
+    batch_shape, flat, mus = _flatten(curves, min_units)
+    _validate(curves, total_units, mus)
+    B, n, _ = flat.shape
+    act = np.broadcast_to(
+        np.asarray(active, dtype=bool), batch_shape + (n,)).reshape(B, n)
+    # The scalar path runs the greedy on curves sliced to the capacity left
+    # after pinning — column `remaining` is that slice's last column, which
+    # the spread key reads.
+    remaining = total_units - mus * (n - act.sum(axis=-1))
+    with _x64_context():
+        out = _greedy_core(
+            jnp.asarray(flat, dtype=jnp.float64),
+            jnp.asarray(mus),
+            jnp.asarray(act),
+            jnp.asarray(remaining),
+            total_units=int(total_units))
+        out = np.asarray(out)
+    none_active = ~act.any(axis=-1)
+    if none_active.any():
+        # All clients pinned: split evenly, remainder to the lowest indices
+        # (the reference's fixed all-friendly branch).
+        extra = total_units - n * mus
+        even = (mus + extra // n)[:, None] + (
+            np.arange(n)[None, :] < (extra % n)[:, None])
+        out = np.where(none_active[:, None], even, out)
+    assert (out.sum(axis=-1) == total_units).all()
+    return out.reshape(batch_shape + (n,)).astype(np.int64)

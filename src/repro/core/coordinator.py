@@ -34,11 +34,18 @@ from repro.core.types import Allocation, CBPParams, IntervalStats, Mode, Prefetc
 
 
 class Plant(Protocol):
-    """What the coordinator manages."""
+    """What the coordinator manages.
+
+    ``allocator_backend`` selects where the Lookahead cache allocator runs
+    ("numpy" host reference | "jax" batched device greedy); consumers read
+    it with a "numpy" fallback, so a plant that omits it still works but
+    silently stays on the host path — declare it explicitly.
+    """
 
     n_clients: int
     total_cache_units: int
     total_bandwidth: float
+    allocator_backend: str
 
     def run_interval(self, alloc: Allocation,
                      duration_ms: float) -> IntervalStats:
@@ -127,8 +134,12 @@ class CBPCoordinator:
 
         n = plant.n_clients
         self.atd = SampledATD(n, plant.total_cache_units)
+        # Allocation is backend-dispatched: plants that keep their model on
+        # device (CMPConfig(backend="jax")) also keep the Lookahead greedy
+        # there (repro.core.cache_controller_jax, bit-parity tested).
         self.cache_ctl = CacheController(
-            plant.total_cache_units, self.params.min_ways)
+            plant.total_cache_units, self.params.min_ways,
+            backend=getattr(plant, "allocator_backend", "numpy"))
         self.bw_ctl = BandwidthController(
             plant.total_bandwidth, self.params.min_bandwidth_allocation)
         self.pf_ctl = PrefetchController(n, self.params.speedup_threshold)

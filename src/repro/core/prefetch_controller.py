@@ -22,12 +22,14 @@ def throttle_decision(
     """Algorithm 2: enable iff speedup > threshold.
 
     Args:
-      perf_with: (n,) performance sampled with prefetching enabled.
-      perf_without: (n,) performance sampled with prefetching disabled.
-      speedup_threshold: paper default 1.05.
+      perf_with: (..., n) performance sampled with prefetching enabled.
+      perf_without: (..., n) performance sampled with prefetching disabled.
+      speedup_threshold: paper default 1.05; may be an array broadcastable
+        against the leading batch axes (shape ``(..., 1)``) so
+        ``run_sweep(param_grid=...)`` can batch over it.
 
     Returns:
-      (n,) bool — prefetcher setting for the next prefetch interval.
+      (..., n) bool — prefetcher setting for the next prefetch interval.
     """
     w = np.asarray(perf_with, dtype=np.float64)
     wo = np.asarray(perf_without, dtype=np.float64)

@@ -24,7 +24,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cache_controller import lookahead_allocate
+from repro.core.cache_controller import CacheController
 from repro.core.types import Allocation, IntervalStats
 
 VMEM_BYTES = 128 * 1024 * 1024   # v5e VMEM per core (order of magnitude)
@@ -57,13 +57,21 @@ def _tile_utility_curves(m: int, n: int, k: int, dtype_bytes: int,
 
 
 def plan_matmul_blocks(m: int, n: int, k: int, *, dtype_bytes: int = 2,
-                       vmem_budget: int = VMEM_BYTES // 8
+                       vmem_budget: int = VMEM_BYTES // 8,
+                       allocator_backend: str = "numpy",
                        ) -> Tuple[int, int, int]:
-    """UCP-allocate the VMEM budget among A/B/ACC tiles -> block sizes."""
+    """UCP-allocate the VMEM budget among A/B/ACC tiles -> block sizes.
+
+    ``allocator_backend="jax"`` runs the Lookahead greedy on device
+    (useful when planning many matmul shapes in one batch is added later);
+    both backends return identical blocks (bit-parity contract).
+    """
     unit = 8192                                   # 8 KiB VMEM "ways"
     total_units = max(vmem_budget // unit, 6)
     curves = _tile_utility_curves(m, n, k, dtype_bytes, unit, total_units)
-    alloc = lookahead_allocate(curves, total_units, min_units=2)
+    alloc = CacheController(
+        total_units, min_units=2,
+        backend=allocator_backend).allocate(curves)
 
     def _pow2_clamp(x, lo, hi):
         p = 2 ** int(np.floor(np.log2(max(x, 1))))
@@ -112,10 +120,12 @@ class TrainingPlant:
                  total_bandwidth_mbps: float,
                  step_fn: Callable[[float, StreamKnobs],
                                    Tuple[np.ndarray, np.ndarray,
-                                         np.ndarray]]):
+                                         np.ndarray]],
+                 allocator_backend: str = "numpy"):
         self.n_clients = n_clients
         self.total_cache_units = total_buffer_units
         self.total_bandwidth = total_bandwidth_mbps
+        self.allocator_backend = allocator_backend
         self._step_fn = step_fn
 
     def run_interval(self, alloc: Allocation,

@@ -22,7 +22,7 @@ from typing import Dict, Hashable, List, Optional, Tuple
 import numpy as np
 
 from repro.core.atd import StackDistanceMonitor
-from repro.core.cache_controller import lookahead_allocate
+from repro.core.cache_controller import CacheController
 
 
 @dataclasses.dataclass
@@ -41,12 +41,17 @@ class PagedKVPool:
     """Fixed pool of KV pages partitioned across streams by CBP."""
 
     def __init__(self, total_pages: int, n_streams: int,
-                 min_pages: int = 2):
+                 min_pages: int = 2, allocator_backend: str = "numpy"):
         if min_pages * n_streams > total_pages:
             raise ValueError("pool too small for min_pages floor")
         self.total_pages = total_pages
         self.n_streams = n_streams
         self.min_pages = min_pages
+        # Backend-dispatched UCP/Lookahead (repro.core.cache_controller):
+        # "jax" runs the repartition on device, useful when many pools
+        # reconfigure together (e.g. a pool per model replica).
+        self.controller = CacheController(
+            total_pages, min_pages, backend=allocator_backend)
         self.partition = np.full(n_streams, total_pages // n_streams,
                                  dtype=np.int64)
         self.partition[: total_pages - int(self.partition.sum())] += 1
@@ -89,8 +94,7 @@ class PagedKVPool:
         """UCP/Lookahead over the measured stack-distance curves
         (paper §3.2.1), then halve the ATD counters (paper §3.3)."""
         curves = self.utility_curves()
-        self.partition = lookahead_allocate(
-            curves, self.total_pages, self.min_pages)
+        self.partition = self.controller.allocate(curves)
         for m in self.monitors:
             m.halve()
         for s in range(self.n_streams):

@@ -1,6 +1,6 @@
 """16-core CMP evaluation substrate for the faithful CBP reproduction.
 
-Interval performance model (paper §4 methodology) + the ten Table-3
+Interval performance model (paper §4 methodology) + the Table-3
 resource-manager configurations + the paper's workloads.
 """
 from repro.sim.apps import (

@@ -1,4 +1,4 @@
-"""The ten resource-manager configurations of paper Table 3.
+"""The resource-manager configurations of paper Table 3.
 
 Every manager runs on the same :class:`~repro.sim.runner.CMPPlant`; the
 subset managers reuse the CBP coordinator with the unmanaged resources
@@ -6,6 +6,11 @@ pinned, exactly mirroring how the paper builds its comparison points.
 CPpf [Xiao et al. '19] is implemented per paper §4.4: prefetch-friendly
 applications receive the minimum partition; UCP partitions the remaining
 capacity among the rest; prefetching enabled; bandwidth unpartitioned.
+
+``MANAGER_NAMES`` covers every ``TABLE3_MODES`` entry plus CPpf —
+including "equal on" (equal partitions, prefetch enabled for everyone),
+which earlier revisions silently skipped; ``tests/test_sim_managers.py``
+pins the two in sync.
 """
 from __future__ import annotations
 
@@ -16,19 +21,19 @@ import numpy as np
 
 from repro.core import (
     Allocation,
+    CacheController,
     CBPCoordinator,
     CBPParams,
     Mode,
     PrefetchMode,
-    lookahead_allocate,
     throttle_decision,
 )
 from repro.core.atd import SampledATD
 from repro.sim.runner import CMPPlant
 
 MANAGER_NAMES = [
-    "baseline", "equal off", "only cache", "only bw", "only pref",
-    "bw+pref", "bw+cache", "cache+pref", "CPpf", "CBP",
+    "baseline", "equal off", "equal on", "only cache", "only bw",
+    "only pref", "bw+pref", "bw+cache", "cache+pref", "CPpf", "CBP",
 ]
 
 # (cache_mode, bandwidth_mode, prefetch_mode) per Table 3.
@@ -82,6 +87,9 @@ def _run_cppf(plant: CMPPlant, total_ms: float,
     n = plant.n_clients
     total_units = plant.total_cache_units
     atd = SampledATD(n, total_units)
+    cache_ctl = CacheController(
+        total_units, params.min_ways,
+        backend=getattr(plant, "allocator_backend", "numpy"))
 
     equal_units = np.full(n, total_units // n, dtype=np.int64)
     bw = np.full(n, plant.total_bandwidth / n)
@@ -116,16 +124,7 @@ def _run_cppf(plant: CMPPlant, total_ms: float,
         # remaining capacity.
         curves = atd.utility_curves()
         atd.halve()
-        others = np.where(~friendly)[0]
-        units = np.full(n, params.min_ways, dtype=np.int64)
-        remaining = total_units - params.min_ways * int(friendly.sum())
-        if len(others) > 0:
-            sub = lookahead_allocate(
-                curves[others][:, : remaining + 1], remaining,
-                params.min_ways)
-            units[others] = sub
-        else:
-            units += (total_units - int(units.sum())) // n
+        units = cache_ctl.allocate_masked(curves, ~friendly)
     return ManagerResult(
         name="CPpf", ipc=ipc_acc / w_acc,
         final_alloc=make_alloc(units, pf_on))

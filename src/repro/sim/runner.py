@@ -3,7 +3,7 @@
 :class:`CMPPlant` implements the :class:`repro.core.coordinator.Plant`
 protocol — ``run_interval`` evaluates the steady-state model under an
 allocation and reports IPC, queuing delays and ATD utility curves.  This is
-the substrate on which all ten Table-3 resource managers execute.
+the substrate on which all Table-3 resource managers execute.
 """
 from __future__ import annotations
 
@@ -24,6 +24,19 @@ class CMPConfig:
     total_bandwidth: float = apps_mod.TOTAL_BW_GBPS
     llc_extra_cycles: float = 0.0   # added LLC hit latency (bigger tiles)
     backend: str = "numpy"          # "numpy" (golden ref) | "jax" (batched)
+    #: Backend for the Lookahead cache allocator.  "auto" follows the model
+    #: backend (and resolves to "jax" on the batched sweep plant, keeping
+    #: whole sweeps device-resident); "numpy"/"jax" force one side.
+    allocator_backend: str = "auto"
+
+
+def _resolve_allocator_backend(config: CMPConfig, default: str) -> str:
+    backend = config.allocator_backend
+    if backend == "auto":
+        backend = default
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown allocator backend {backend!r}")
+    return backend
 
 
 class CMPPlant:
@@ -41,6 +54,8 @@ class CMPPlant:
         self.config = config or CMPConfig()
         if self.config.backend not in ("numpy", "jax"):
             raise ValueError(f"unknown backend {self.config.backend!r}")
+        self.allocator_backend = _resolve_allocator_backend(
+            self.config, default=self.config.backend)
         self.n_clients = self.apps.n
         self.total_cache_units = self.config.total_cache_units
         self.total_bandwidth = self.config.total_bandwidth

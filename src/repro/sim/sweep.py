@@ -1,12 +1,20 @@
 """Batched Table-3 sweep runner (the Figs. 9-12 evaluation substrate).
 
-The paper's headline results come from running ten resource-manager
+The paper's headline results come from running the Table-3 resource-manager
 configurations over dozens of 16-core workload mixes.  The scalar path
 (:func:`repro.sim.managers.run_all_managers`) evaluates one (mix, manager)
 pair at a time; this module stacks all mixes along a leading batch axis and
 drives the jitted JAX interval model (:mod:`repro.sim.memsys_jax`), so each
 timeline segment of each manager is ONE device call covering every mix —
 no Python loop ever calls ``memsys.evaluate`` per (mix, manager) pair.
+
+Since PR 2 the Lookahead cache allocator is batched too
+(:mod:`repro.core.cache_controller_jax`): every reconfiguration boundary is
+one jitted device call over all mixes, so a full sweep performs **zero**
+per-mix host allocator calls (assert with
+:func:`repro.core.allocator_calls`) and host transfers drop to one per
+Fig. 8 segment.  CPpf's friendly-mask allocation is vectorized the same
+way (`CacheController.allocate_masked`).
 
 Structure:
 
@@ -15,38 +23,42 @@ Structure:
 * :class:`BatchedCoordinator` — :class:`~repro.core.CBPCoordinator`
   vectorized over the mix axis.  It executes exactly the same
   :func:`~repro.core.fig8_schedule` segment list, so scalar and batched
-  trajectories cannot drift apart on scheduling.  Only the integer
-  Lookahead allocator runs per mix (a data-dependent greedy loop).
-* :func:`run_sweep` — evaluate a set of managers over a set of mixes;
-  returns a :class:`SweepResult` with per-mix IPC, weighted speedup and
-  ANTT against the shared unpartitioned baseline.
+  trajectories cannot drift apart on scheduling.  ``params_rows`` lets
+  each batch row carry its own non-schedule ``CBPParams`` (min_ways,
+  speedup_threshold, min_bandwidth_allocation), which is how
+  ``param_grid`` sweeps batch the Fig. 12 design space.
+* :func:`run_sweep` — evaluate a set of managers over a set of mixes (and
+  optionally a leading ``CBPParams`` axis via ``param_grid=``); returns a
+  :class:`SweepResult` with per-mix IPC, weighted speedup and ANTT against
+  the shared unpartitioned baseline.
 
 Parity contract: with the same mixes and parameters, per-mix results match
 the scalar numpy path up to the 1e-5 model tolerance (and bit-identical
-controller decisions away from knife-edges) — see ``tests/test_sim_sweep.py``.
+controller decisions away from knife-edges) — see ``tests/test_sim_sweep.py``
+and ``tests/test_cache_controller_jax.py``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import (
     Allocation,
     BandwidthController,
+    CacheController,
     CBPParams,
     Mode,
     PrefetchMode,
     fig8_schedule,
-    lookahead_allocate,
     throttle_decision,
 )
 from repro.core.types import IntervalStats
 from repro.sim import memsys, memsys_jax
 from repro.sim.apps import AppArrays, stack_mixes
 from repro.sim.managers import MANAGER_NAMES, TABLE3_MODES
-from repro.sim.runner import CMPConfig
+from repro.sim.runner import CMPConfig, _resolve_allocator_backend
 
 
 class BatchedCMPPlant:
@@ -66,6 +78,9 @@ class BatchedCMPPlant:
         # config.backend selects the SCALAR plant's model implementation;
         # the batched plant is the JAX path by construction and uses the
         # remaining CMPConfig fields (capacities, llc_extra_cycles) as-is.
+        # The allocator follows suit: "auto" keeps allocation on device.
+        self.allocator_backend = _resolve_allocator_backend(
+            self.config, default="jax")
         self.n_mixes, self.n_clients = np.asarray(self.apps.cpi_base).shape
         self.total_cache_units = self.config.total_cache_units
         self.total_bandwidth = self.config.total_bandwidth
@@ -111,6 +126,38 @@ def baseline_ipc_batched(plant: BatchedCMPPlant) -> np.ndarray:
     return np.asarray(plant.evaluate(alloc).ipc)
 
 
+def _per_row_params(
+    params: CBPParams,
+    params_rows: Optional[Sequence[CBPParams]],
+    n_rows: int,
+) -> Tuple[CBPParams, object, object, object]:
+    """Resolve (schedule_params, min_ways, speedup_threshold, min_bw).
+
+    With ``params_rows`` the three non-schedule tunables become per-row
+    arrays (min_ways (M,), the other two (M, 1) for broadcasting); the
+    schedule-shaping fields must agree across rows because every batch row
+    executes the same Fig. 8 segment list in lockstep.
+    """
+    if params_rows is None:
+        return (params, params.min_ways, params.speedup_threshold,
+                params.min_bandwidth_allocation)
+    rows = list(params_rows)
+    if len(rows) != n_rows:
+        raise ValueError(
+            f"params_rows has {len(rows)} entries for {n_rows} batch rows")
+    sched = {(p.reconfiguration_interval_ms, p.prefetch_sampling_period_ms)
+             for p in rows}
+    if len(sched) > 1:
+        raise ValueError(
+            "params_rows must share reconfiguration_interval_ms and "
+            "prefetch_sampling_period_ms (the Fig. 8 schedule is common to "
+            f"the whole batch); got {sorted(sched)}")
+    min_ways = np.array([p.min_ways for p in rows], dtype=np.int64)
+    thr = np.array([p.speedup_threshold for p in rows])[:, None]
+    min_bw = np.array([p.min_bandwidth_allocation for p in rows])[:, None]
+    return rows[0], min_ways, thr, min_bw
+
+
 class BatchedCoordinator:
     """One Table-3 manager, coordinated across all mixes in lockstep.
 
@@ -118,8 +165,11 @@ class BatchedCoordinator:
     leading mix axis: ATD counters are (M, n, U+1), the shared
     :class:`~repro.core.BandwidthController` accumulates (M, n) delays,
     and the prefetch A/B decision is elementwise.  All mixes share one
-    Fig. 8 timeline (it depends only on the manager's prefetch mode),
-    which is what makes lockstep exact.
+    Fig. 8 timeline (it depends only on the manager's prefetch mode and
+    the schedule-shaping params), which is what makes lockstep exact.
+    Cache allocation is one batched device call per reconfiguration
+    boundary (:class:`~repro.core.CacheController` with the plant's
+    allocator backend) — never a per-mix host loop.
     """
 
     def __init__(
@@ -129,17 +179,21 @@ class BatchedCoordinator:
         cache_mode: Mode = Mode.DYNAMIC,
         bandwidth_mode: Mode = Mode.DYNAMIC,
         prefetch_mode: PrefetchMode = PrefetchMode.DYNAMIC,
+        params_rows: Optional[Sequence[CBPParams]] = None,
     ):
         self.plant = plant
-        self.params = params or CBPParams()
         self.cache_mode = cache_mode
         self.bandwidth_mode = bandwidth_mode
         self.prefetch_mode = prefetch_mode
 
         m, n = plant.n_mixes, plant.n_clients
+        self.params, self._min_ways, self._thr, min_bw = _per_row_params(
+            params or CBPParams(), params_rows, m)
+        self.cache_ctl = CacheController(
+            plant.total_cache_units, self.params.min_ways,
+            backend=plant.allocator_backend)
         self._atd = np.zeros((m, n, plant.total_cache_units + 1))
-        self.bw_ctl = BandwidthController(
-            plant.total_bandwidth, self.params.min_bandwidth_allocation)
+        self.bw_ctl = BandwidthController(plant.total_bandwidth, min_bw)
         self._ipc_acc = np.zeros((m, n))
         self._w_acc = 0.0
 
@@ -166,10 +220,8 @@ class BatchedCoordinator:
 
     def _reconfigure(self) -> None:
         if self.cache_mode == Mode.DYNAMIC:
-            for i in range(self.plant.n_mixes):
-                self.alloc.cache_units[i] = lookahead_allocate(
-                    self._atd[i], self.plant.total_cache_units,
-                    self.params.min_ways)
+            self.alloc.cache_units = self.cache_ctl.allocate(
+                self._atd, min_units=self._min_ways)
         self._atd *= 0.5
         if self.bandwidth_mode == Mode.DYNAMIC:
             self.alloc.bandwidth = self.bw_ctl.allocate()
@@ -197,8 +249,7 @@ class BatchedCoordinator:
                 stats_on = self._run(self._with_prefetch(True),
                                      seg.duration_ms)
                 self.alloc.prefetch_on = throttle_decision(
-                    stats_on.ipc, stats_off.ipc,
-                    self.params.speedup_threshold)
+                    stats_on.ipc, stats_off.ipc, self._thr)
             else:
                 self._run(self.alloc, seg.duration_ms)
 
@@ -207,10 +258,19 @@ class BatchedCoordinator:
 
 
 def _run_cppf_batched(plant: BatchedCMPPlant, total_ms: float,
-                      params: CBPParams):
-    """Vectorized CPpf (mirrors ``managers._run_cppf`` per mix)."""
+                      params: CBPParams,
+                      params_rows: Optional[Sequence[CBPParams]] = None):
+    """Vectorized CPpf (mirrors ``managers._run_cppf`` per mix).
+
+    The friendly-mask allocation is ONE batched device call per
+    reconfiguration (``CacheController.allocate_masked``), replacing the
+    former per-mix Python loop.
+    """
     m, n = plant.n_mixes, plant.n_clients
     total_units = plant.total_cache_units
+    params, min_ways, thr, _min_bw = _per_row_params(params, params_rows, m)
+    cache_ctl = CacheController(
+        total_units, params.min_ways, backend=plant.allocator_backend)
     equal_units = np.full((m, n), total_units // n, dtype=np.int64)
     bw = np.full((m, n), plant.total_bandwidth / n)
 
@@ -225,7 +285,7 @@ def _run_cppf_batched(plant: BatchedCMPPlant, total_ms: float,
     on = plant.run_interval(
         make_alloc(equal_units, np.ones((m, n), dtype=bool)),
         params.prefetch_sampling_period_ms)
-    friendly = throttle_decision(on.ipc, off.ipc, params.speedup_threshold)
+    friendly = throttle_decision(on.ipc, off.ipc, thr)
 
     pf_on = np.ones((m, n), dtype=bool)
     units = equal_units.copy()
@@ -242,49 +302,73 @@ def _run_cppf_batched(plant: BatchedCMPPlant, total_ms: float,
         t += dt
         curves = atd.copy()
         atd *= 0.5
-        for i in range(m):
-            others = np.where(~friendly[i])[0]
-            u = np.full(n, params.min_ways, dtype=np.int64)
-            remaining = total_units - params.min_ways * int(friendly[i].sum())
-            if len(others) > 0:
-                u[others] = lookahead_allocate(
-                    curves[i][others][:, : remaining + 1], remaining,
-                    params.min_ways)
-            else:
-                u += (total_units - int(u.sum())) // n
-            units[i] = u
+        units = cache_ctl.allocate_masked(
+            curves, ~friendly, min_units=min_ways)
+        assert (units.sum(axis=-1) == total_units).all()
     return ipc_acc / w_acc, make_alloc(units, pf_on)
+
+
+def _run_one_manager(
+    plant: BatchedCMPPlant,
+    name: str,
+    total_ms: float,
+    params: CBPParams,
+    params_rows: Optional[Sequence[CBPParams]] = None,
+) -> Tuple[np.ndarray, Allocation]:
+    """One manager over every batch row of ``plant`` -> ((M, n) ipc, alloc)."""
+    if name == "CPpf":
+        return _run_cppf_batched(plant, total_ms, params, params_rows)
+    cache_mode, bw_mode, pf_mode = TABLE3_MODES[name]
+    coord = BatchedCoordinator(
+        plant, params=params, cache_mode=cache_mode,
+        bandwidth_mode=bw_mode, prefetch_mode=pf_mode,
+        params_rows=params_rows)
+    coord.run(total_ms)
+    return coord.mean_ipc(), coord.alloc
 
 
 @dataclasses.dataclass
 class SweepResult:
-    """Per-(manager, mix, app) outcome of one sweep."""
+    """Per-(manager, mix, app) outcome of one sweep.
+
+    Without ``param_grid`` the arrays are (M, n); with it they gain a
+    leading params axis, (P, M, n), and the metric helpers broadcast
+    accordingly (``weighted_speedup`` -> (P, M), ``geomean_speedup`` ->
+    (P,)).  The baseline is parameter-independent and stays (M, n).
+    """
 
     manager_names: List[str]
     mixes: List[List[str]]
-    ipc: Dict[str, np.ndarray]            # name -> (M, n)
-    final_alloc: Dict[str, Allocation]    # name -> batched (M, n) allocation
+    ipc: Dict[str, np.ndarray]            # name -> (M, n) | (P, M, n)
+    final_alloc: Dict[str, Allocation]    # name -> batched allocation
     baseline_ipc: np.ndarray              # (M, n)
+    param_grid: Optional[List[CBPParams]] = None
 
     @property
     def n_mixes(self) -> int:
         return len(self.mixes)
 
     def weighted_speedup(self, name: str) -> np.ndarray:
-        """Paper §4.3 weighted speedup per mix, shape (M,)."""
+        """Paper §4.3 weighted speedup per mix, shape (M,) (or (P, M))."""
         return np.mean(self.ipc[name] / self.baseline_ipc, axis=-1)
 
     def antt(self, name: str) -> np.ndarray:
-        """Paper §4.3 avg normalized turnaround time per mix, shape (M,)."""
+        """Paper §4.3 avg normalized turnaround time per mix, (M,)/(P, M)."""
         return np.mean(self.baseline_ipc / self.ipc[name], axis=-1)
 
-    def geomean_speedup(self, name: str) -> float:
-        return float(np.exp(np.mean(np.log(self.weighted_speedup(name)))))
+    def geomean_speedup(self, name: str):
+        """Geomean over mixes: float, or (P,) with a ``param_grid``."""
+        g = np.exp(np.mean(np.log(self.weighted_speedup(name)), axis=-1))
+        return float(g) if np.ndim(g) == 0 else g
 
-    def summary(self) -> Dict[str, float]:
+    def summary(self) -> Dict[str, object]:
         """Geomean weighted speedup per manager over all mixes."""
-        return {name: round(self.geomean_speedup(name), 4)
-                for name in self.manager_names}
+        out: Dict[str, object] = {}
+        for name in self.manager_names:
+            g = self.geomean_speedup(name)
+            out[name] = (round(g, 4) if np.ndim(g) == 0
+                         else [round(float(x), 4) for x in np.asarray(g)])
+        return out
 
 
 def run_sweep(
@@ -293,40 +377,109 @@ def run_sweep(
     total_ms: float = 100.0,
     params: Optional[CBPParams] = None,
     config: Optional[CMPConfig] = None,
+    param_grid: Optional[Sequence[CBPParams]] = None,
 ) -> SweepResult:
     """Evaluate Table-3 managers over many mixes in batched device calls.
 
     Args:
       mixes: equal-size workload mixes (lists of app names) — e.g.
         ``list(WORKLOADS.values())`` or :func:`repro.sim.random_mixes`.
-      managers: manager names (default: all ten ``MANAGER_NAMES``).
+      managers: manager names (default: all ``MANAGER_NAMES``).
       total_ms / params / config: as in ``managers.run_manager``.
+      param_grid: optional sequence of ``CBPParams`` — adds a leading P
+        axis to the results (Fig. 12 design-space exploration as one
+        sweep).  Params sharing a Fig. 8 schedule are stacked into a
+        single device-resident batch of P_g x M rows; schedule-distinct
+        params run as separate batches of the same sweep.  Mutually
+        exclusive with ``params``.
     """
     plant = BatchedCMPPlant(mixes, config)
-    params = params or CBPParams()
     names = list(MANAGER_NAMES) if managers is None else list(managers)
     unknown = [n for n in names if n != "CPpf" and n not in TABLE3_MODES]
     if unknown:
         raise ValueError(
             f"unknown managers {unknown}; valid: {MANAGER_NAMES}")
-    ipc: Dict[str, np.ndarray] = {}
-    final: Dict[str, Allocation] = {}
-    for name in names:
+
+    if param_grid is None:
+        params = params or CBPParams()
+        ipc: Dict[str, np.ndarray] = {}
+        final: Dict[str, Allocation] = {}
+        for name in names:
+            ipc[name], final[name] = _run_one_manager(
+                plant, name, total_ms, params)
+        return SweepResult(
+            manager_names=names,
+            mixes=plant.mixes,
+            ipc=ipc,
+            final_alloc=final,
+            baseline_ipc=baseline_ipc_batched(plant),
+        )
+
+    if params is not None:
+        raise ValueError("pass either params or param_grid, not both")
+    grid = list(param_grid)
+    if not grid:
+        raise ValueError("param_grid must be non-empty")
+    P, M, n = len(grid), plant.n_mixes, plant.n_clients
+    ipc = {name: np.empty((P, M, n)) for name in names}
+    units = {name: np.empty((P, M, n), dtype=np.int64) for name in names}
+    bws = {name: np.empty((P, M, n)) for name in names}
+    pfs = {name: np.empty((P, M, n), dtype=bool) for name in names}
+    modes: Dict[str, Tuple[Mode, Mode]] = {}
+
+    def _params_static(name: str) -> bool:
+        """True when no CBPParams field can change the manager's result:
+        nothing dynamic means no reconfiguration, no A/B sampling, and a
+        time-weighted mean that is segmentation-invariant."""
         if name == "CPpf":
-            ipc[name], final[name] = _run_cppf_batched(
-                plant, total_ms, params)
-            continue
-        cache_mode, bw_mode, pf_mode = TABLE3_MODES[name]
-        coord = BatchedCoordinator(
-            plant, params=params, cache_mode=cache_mode,
-            bandwidth_mode=bw_mode, prefetch_mode=pf_mode)
-        coord.run(total_ms)
-        ipc[name] = coord.mean_ipc()
-        final[name] = coord.alloc
+            return False
+        cm, bm, pm = TABLE3_MODES[name]
+        return (cm != Mode.DYNAMIC and bm != Mode.DYNAMIC
+                and pm != PrefetchMode.DYNAMIC)
+
+    static_names = [name for name in names if _params_static(name)]
+    for name in static_names:
+        mipc, alloc = _run_one_manager(plant, name, total_ms, grid[0])
+        ipc[name][:] = np.asarray(mipc)[None]
+        units[name][:] = np.asarray(alloc.cache_units)[None]
+        bws[name][:] = np.asarray(alloc.bandwidth)[None]
+        pfs[name][:] = np.asarray(alloc.prefetch_on)[None]
+        modes[name] = (alloc.cache_mode, alloc.bandwidth_mode)
+    grid_names = [name for name in names if name not in static_names]
+
+    groups: Dict[Tuple[float, float], List[int]] = {}
+    for pi, p in enumerate(grid):
+        key = (p.reconfiguration_interval_ms, p.prefetch_sampling_period_ms)
+        groups.setdefault(key, []).append(pi)
+
+    for idxs in (groups.values() if grid_names else ()):
+        tiled = [mix for _ in idxs for mix in mixes]
+        gplant = BatchedCMPPlant(tiled, config)
+        rows = [grid[pi] for pi in idxs for _ in range(M)]
+        G = len(idxs)
+        for name in grid_names:
+            mipc, alloc = _run_one_manager(
+                gplant, name, total_ms, rows[0], params_rows=rows)
+            ipc[name][idxs] = np.asarray(mipc).reshape(G, M, n)
+            units[name][idxs] = np.asarray(
+                alloc.cache_units).reshape(G, M, n)
+            bws[name][idxs] = np.asarray(alloc.bandwidth).reshape(G, M, n)
+            pfs[name][idxs] = np.asarray(
+                alloc.prefetch_on).reshape(G, M, n)
+            modes[name] = (alloc.cache_mode, alloc.bandwidth_mode)
+
+    final = {
+        name: Allocation(
+            cache_units=units[name], bandwidth=bws[name],
+            prefetch_on=pfs[name], cache_mode=modes[name][0],
+            bandwidth_mode=modes[name][1])
+        for name in names
+    }
     return SweepResult(
         manager_names=names,
         mixes=plant.mixes,
         ipc=ipc,
         final_alloc=final,
         baseline_ipc=baseline_ipc_batched(plant),
+        param_grid=grid,
     )

@@ -1,0 +1,174 @@
+"""Batched JAX Lookahead allocator vs the numpy golden reference.
+
+Contract (see ``src/repro/core/cache_controller_jax.py``): bit-identical
+allocations away from tie knife-edges, under the documented deterministic
+tie-breaks (lowest client index wins equal marginal utility; smallest step
+wins within a client; the zero-utility spread orders by remaining gain with
+a stable sort).  Random float curves make exact mu ties measure-zero, so
+these tests assert exact equality.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    CacheController,
+    allocator_calls,
+    cppf_allocate,
+    lookahead_allocate,
+)
+from repro.core import cache_controller_jax as ccj
+
+
+def _concave_curves(rng, n, total):
+    u = np.arange(total + 1, dtype=np.float64)
+    scales = rng.uniform(0.0, 50.0, size=n)
+    rates = rng.uniform(2.0, 40.0, size=n)
+    return scales[:, None] * (1.0 - np.exp(-u[None, :] / rates[:, None]))
+
+
+def _nonmonotone_curves(rng, n, total):
+    return np.cumsum(rng.normal(0.0, 1.0, size=(n, total + 1)), axis=1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 8),
+    total=st.integers(24, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_batched_matches_reference_on_monotone_curves(n, total, seed):
+    rng = np.random.default_rng(seed)
+    curves = _concave_curves(rng, n, total)
+    min_units = int(rng.integers(0, max(total // n, 1)))
+    ref = lookahead_allocate(curves, total, min_units)
+    got = ccj.lookahead_allocate(curves, total, min_units)
+    np.testing.assert_array_equal(ref, got)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 8),
+    total=st.integers(24, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_batched_matches_reference_on_nonmonotone_curves(n, total, seed):
+    """Non-monotone curves exercise negative marginal utilities and the
+    spread-remainder branch (max mu <= 0 mid-distribution)."""
+    rng = np.random.default_rng(seed)
+    curves = _nonmonotone_curves(rng, n, total)
+    min_units = int(rng.integers(0, max(total // n, 1)))
+    ref = lookahead_allocate(curves, total, min_units)
+    got = ccj.lookahead_allocate(curves, total, min_units)
+    np.testing.assert_array_equal(ref, got)
+
+
+def test_spread_remainder_branch_flat_curves():
+    """Zero utility everywhere: the even-spread branch fires immediately
+    and both backends distribute the whole balance the same way."""
+    total = 37
+    for n in (2, 3, 5):
+        curves = np.zeros((n, total + 1))
+        ref = lookahead_allocate(curves, total, min_units=2)
+        got = ccj.lookahead_allocate(curves, total, min_units=2)
+        np.testing.assert_array_equal(ref, got)
+        assert got.sum() == total
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), min_units=st.integers(1, 5))
+def test_batched_respects_min_units_floor(seed, min_units):
+    rng = np.random.default_rng(seed)
+    n, total = 6, 64
+    curves = _nonmonotone_curves(rng, n, total)
+    got = ccj.lookahead_allocate(curves, total, min_units)
+    assert (got >= min_units).all()
+    assert got.sum() == total
+    np.testing.assert_array_equal(
+        got, lookahead_allocate(curves, total, min_units))
+
+
+def test_batched_leading_axes_and_per_batch_min_units():
+    rng = np.random.default_rng(3)
+    n, total = 5, 40
+    curves = np.stack([
+        np.stack([_concave_curves(rng, n, total) for _ in range(3)])
+        for _ in range(2)])                        # (2, 3, n, U+1)
+    mins = np.array([[1, 2, 3], [4, 0, 2]])        # broadcast per element
+    got = ccj.lookahead_allocate(curves, total, mins)
+    assert got.shape == (2, 3, n)
+    for i in range(2):
+        for j in range(3):
+            np.testing.assert_array_equal(
+                got[i, j],
+                lookahead_allocate(curves[i, j], total, int(mins[i, j])))
+
+
+def test_batched_rejects_infeasible_inputs():
+    with pytest.raises(ValueError):
+        ccj.lookahead_allocate(np.zeros((4, 9)), 8, min_units=4)
+    with pytest.raises(ValueError):
+        ccj.lookahead_allocate(np.zeros((4, 12)), 8, min_units=4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 8),
+    total=st.integers(24, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_masked_matches_cppf_reference(n, total, seed):
+    """The CPpf friendly-mask variant matches the scalar subset call,
+    including the min_units pinning of inactive clients."""
+    rng = np.random.default_rng(seed)
+    curves = np.cumsum(
+        np.abs(rng.normal(0.0, 1.0, size=(n, total + 1))), axis=1)
+    min_units = int(rng.integers(1, max(total // n, 2)))
+    active = rng.integers(0, 2, size=n).astype(bool)
+    ref = cppf_allocate(curves, total, min_units, active)
+    got = ccj.lookahead_allocate_masked(curves, total, min_units, active)
+    np.testing.assert_array_equal(ref, got)
+    assert got.sum() == total
+    if active.any():   # otherwise the even-split exceeds the floor
+        assert (got[~active] == min_units).all()
+
+
+def test_masked_all_inactive_distributes_remainder():
+    """All-friendly CPpf mixes: capacity splits evenly and the remainder
+    goes to the lowest-index clients — no unit is dropped (the former
+    floor-division bug)."""
+    total, n, min_units = 30, 4, 4
+    curves = np.zeros((n, total + 1))
+    ref = cppf_allocate(curves, total, min_units, np.zeros(n, dtype=bool))
+    got = ccj.lookahead_allocate_masked(
+        curves, total, min_units, np.zeros(n, dtype=bool))
+    np.testing.assert_array_equal(ref, got)
+    assert ref.sum() == total          # 30 = 8 + 8 + 7 + 7
+    np.testing.assert_array_equal(ref, [8, 8, 7, 7])
+
+
+def test_cache_controller_backend_dispatch():
+    """Both backends agree through the CacheController facade, and only
+    the numpy backend touches the host allocator counter."""
+    rng = np.random.default_rng(11)
+    n, total = 6, 48
+    batch = np.stack([_nonmonotone_curves(rng, n, total) for _ in range(4)])
+    ctl_np = CacheController(total, min_units=2, backend="numpy")
+    ctl_jx = CacheController(total, min_units=2, backend="jax")
+
+    before = allocator_calls()
+    out_np = ctl_np.allocate(batch)
+    assert allocator_calls() - before == 4      # one host call per element
+
+    before = allocator_calls()
+    out_jx = ctl_jx.allocate(batch)
+    assert allocator_calls() - before == 0      # device-resident
+    np.testing.assert_array_equal(out_np, out_jx)
+
+    active = rng.integers(0, 2, size=(4, n)).astype(bool)
+    np.testing.assert_array_equal(
+        ctl_np.allocate_masked(batch, active),
+        ctl_jx.allocate_masked(batch, active))
+
+    with pytest.raises(ValueError):
+        CacheController(total, backend="pallas")

@@ -5,6 +5,7 @@ import pytest
 from repro.core import CBPCoordinator, CBPParams, Mode, PrefetchMode
 from repro.sim import (
     MANAGER_NAMES,
+    TABLE3_MODES,
     WORKLOADS,
     antt,
     baseline_ipc,
@@ -12,6 +13,14 @@ from repro.sim import (
     weighted_speedup,
 )
 from repro.sim.runner import CMPPlant
+
+
+def test_manager_names_cover_table3_modes():
+    """Every Table-3 mode (notably "equal on", once silently skipped) is a
+    sweep-able manager; CPpf is the only extra name."""
+    assert set(MANAGER_NAMES) == set(TABLE3_MODES) | {"CPpf"}
+    assert "equal on" in MANAGER_NAMES
+    assert len(MANAGER_NAMES) == len(set(MANAGER_NAMES))
 
 
 @pytest.fixture(scope="module")

@@ -8,6 +8,7 @@ must reproduce the scalar manager results without ever calling the scalar
 import numpy as np
 import pytest
 
+from repro.core import CBPParams, allocator_calls
 from repro.sim import (
     MANAGER_NAMES,
     WORKLOADS,
@@ -118,6 +119,46 @@ def test_sweep_preserves_cbp_beats_baseline_ordering():
     for single in ("only cache", "only bw", "only pref", "equal off"):
         assert cbp > res.geomean_speedup(single), single
     assert (res.weighted_speedup("CBP") > 1.0).all()
+
+
+def test_sweep_performs_zero_host_allocator_calls():
+    """Device-resident contract: the batched sweep never calls the numpy
+    ``lookahead_allocate`` per mix — reconfigurations run as batched JAX
+    device calls (repro.core.cache_controller_jax)."""
+    mixes = random_mixes(3, 16, seed=9)
+    before = allocator_calls()
+    res = run_sweep(mixes, managers=["only cache", "CPpf", "CBP"],
+                    total_ms=20.0)
+    assert allocator_calls() == before
+    for name in ("only cache", "CPpf", "CBP"):
+        assert (res.final_alloc[name].cache_units.sum(axis=-1) == 256).all()
+        assert (res.final_alloc[name].cache_units >= 4).all()
+
+
+def test_sweep_param_grid_batches_design_space():
+    """`param_grid` adds a leading CBPParams axis; same-schedule params run
+    as one device batch and every slice matches an independent sweep."""
+    grid = [CBPParams(min_bandwidth_allocation=0.5),
+            CBPParams(min_bandwidth_allocation=1.0),     # same schedule
+            CBPParams(reconfiguration_interval_ms=5.0)]  # distinct schedule
+    mixes = [WORKLOADS["w1"], WORKLOADS["w2"]]
+    # "equal on" is CBPParams-independent: evaluated once, broadcast to P.
+    names = ["equal on", "CBP", "CPpf"]
+    res = run_sweep(mixes, managers=names, total_ms=20.0, param_grid=grid)
+    assert res.param_grid == grid
+    assert res.ipc["CBP"].shape == (3, 2, 16)
+    assert res.weighted_speedup("CBP").shape == (3, 2)
+    assert np.shape(res.geomean_speedup("CBP")) == (3,)
+    for name in names:
+        assert res.ipc[name].shape == (3, 2, 16)
+        assert (res.final_alloc[name].cache_units.sum(axis=-1) == 256).all()
+    for pi, p in enumerate(grid):
+        ref = run_sweep(mixes, managers=names, total_ms=20.0, params=p)
+        for name in names:
+            np.testing.assert_array_equal(res.ipc[name][pi], ref.ipc[name])
+    with pytest.raises(ValueError):
+        run_sweep(mixes, managers=["CBP"], params=CBPParams(),
+                  param_grid=grid)
 
 
 def test_random_mixes_shapes_and_balance():

@@ -2,7 +2,26 @@
 # Tier-1 verify wrapper — the single entry point used by CI
 # (.github/workflows/ci.yml) and by ROADMAP.md.  Extra args are forwarded
 # to pytest (e.g. ./tools/run_tests.sh tests/test_sim_sweep.py -k parity).
+#
+# --smoke additionally runs the <60 s device-resident sweep smoke
+# (benchmarks/sweep_smoke.py): asserts zero per-mix host allocator calls
+# and records sweep wall-time JSON under results/bench/.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+
+SMOKE=0
+PYTEST_ARGS=()
+for arg in "$@"; do
+  if [ "$arg" = "--smoke" ]; then
+    SMOKE=1
+  else
+    PYTEST_ARGS+=("$arg")
+  fi
+done
+
+python -m pytest -x -q ${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}
+
+if [ "$SMOKE" = "1" ]; then
+  timeout 60 python -m benchmarks.sweep_smoke
+fi
