@@ -6,26 +6,66 @@ every Table-3 manager over all of them and this report summarizes how the
 paper's headline ordering holds up across the broader scenario space —
 spread of the CBP weighted speedup, win rate against the best
 two-technique manager, and which generated mixes are hardest.
+
+Since PR 3 the report also times each scenario family over both timeline
+backends — the fused one-program-per-(manager, timeline) path
+(:mod:`repro.sim.timeline_jax`) and the PR 2 per-segment host loop — so
+the fused speedup is visible per family, not just in the CI smoke.
 """
 from __future__ import annotations
 
-from typing import Dict
+import time
+from typing import Dict, List
 
 import numpy as np
 
 from benchmarks.common import emit, timer
-from repro.sim import MANAGER_NAMES, random_mixes, run_sweep
+from repro.sim import MANAGER_NAMES, WORKLOADS, random_mixes, run_sweep
+from repro.sim.runner import CMPConfig
 from repro.sim.workloads import _CLASS_BUCKETS
 
 PAIR_MANAGERS = ("bw+pref", "bw+cache", "cache+pref", "CPpf")
 
 
+def _families(n_mixes: int, n_apps: int, seed: int) -> Dict[str, List]:
+    """Scenario families reported on: the transcribed paper mixes and the
+    class-balanced generated space (two seeds = two disjoint draws)."""
+    return {
+        "paper_w1_w14": list(WORKLOADS.values()),
+        "random_balanced": random_mixes(n_mixes, n_apps, seed=seed),
+        "random_balanced_alt": random_mixes(n_mixes, n_apps, seed=seed + 1),
+    }
+
+
+def _timed_sweep(mixes, total_ms: float, config=None):
+    """(result, warm wall seconds) — first call warms the jit caches."""
+    run_sweep(mixes, total_ms=total_ms, config=config)
+    t0 = time.monotonic()
+    res = run_sweep(mixes, total_ms=total_ms, config=config)
+    return res, time.monotonic() - t0
+
+
 def scenario_diversity(n_mixes: int = 32, n_apps: int = 16, seed: int = 0,
                        total_ms: float = 40.0) -> Dict[str, object]:
-    """Sweep ``n_mixes`` generated scenarios x all managers in one call."""
+    """Sweep every scenario family x all managers, fused and segment."""
+    segment_cfg = CMPConfig(timeline_backend="segment")
     with timer() as t:
-        mixes = random_mixes(n_mixes, n_apps, seed=seed)
-        res = run_sweep(mixes, total_ms=total_ms)
+        families = _families(n_mixes, n_apps, seed)
+        walls: Dict[str, Dict[str, float]] = {}
+        res = None
+        for fam, mixes in families.items():
+            fused_res, wall_fused = _timed_sweep(mixes, total_ms)
+            _, wall_seg = _timed_sweep(mixes, total_ms, segment_cfg)
+            walls[fam] = {
+                "n_mixes": len(mixes),
+                "wall_s_fused": round(wall_fused, 3),
+                "wall_s_segment": round(wall_seg, 3),
+                "fused_speedup": round(wall_seg / max(wall_fused, 1e-9), 2),
+            }
+            if fam == "random_balanced":
+                res = fused_res
+
+        mixes = families["random_balanced"]
         ws = {m: np.asarray(res.weighted_speedup(m)) for m in MANAGER_NAMES}
         cbp = ws["CBP"]
         best_pair = np.max([ws[m] for m in PAIR_MANAGERS], axis=0)
@@ -41,6 +81,7 @@ def scenario_diversity(n_mixes: int = 32, n_apps: int = 16, seed: int = 0,
             "n_apps_per_mix": n_apps,
             "distinct_apps": len(distinct),
             "class_coverage_mixes": class_cover,
+            "timeline_wall_s": walls,
             "geomean_ws": {
                 m: round(float(np.exp(np.mean(np.log(ws[m])))), 3)
                 for m in MANAGER_NAMES},

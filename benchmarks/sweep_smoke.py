@@ -1,21 +1,37 @@
-"""Device-resident sweep smoke: the CI gate for the batched allocator path.
+"""Device-resident sweep smoke: the CI gate for the fused timeline path.
 
-Runs an all-manager x many-mix sweep and asserts the contract that makes
-sweeps scale: the batched path performs ZERO per-mix host allocator calls
-(counter hook on the numpy ``lookahead_allocate``).  The sweep runs twice;
-the second, jit-warm wall time is the primary trajectory metric (the cold
-run mostly measures XLA compilation) and is checked against the committed
-``results/bench/sweep_smoke.json`` record — a regression beyond
-``SWEEP_SMOKE_BUDGET_X`` (default 3x, slack for machine variance) fails
-the smoke.  The refreshed record keeps any prior ``--compare-host``
-fields, so plain CI runs don't clobber the recorded host-path evidence.
+Runs an all-manager x many-mix sweep and asserts the contracts that make
+sweeps scale:
 
-``--compare-host`` additionally times the same sweep with the allocator
-forced onto the host (``CMPConfig(allocator_backend="numpy")`` — the PR 1
-per-mix Python loop) and records the speedup.  CI skips the comparison to
-stay inside its 60 s budget; run it locally when touching the allocator.
+* ZERO per-mix host allocator calls (counter hook on the numpy
+  ``lookahead_allocate``), and
+* ONE device program per (manager, timeline) plus a single baseline
+  evaluation — the PR 3 fused-timeline dispatch contract, checked with
+  the :func:`repro.core.device_dispatches` counter on the warm run.
 
-    PYTHONPATH=src python -m benchmarks.sweep_smoke [--compare-host]
+The sweep runs three times; the jit-warm wall time (min over the two
+warm runs — the cold run mostly measures XLA compilation, and the min
+de-noises shared-runner interference) is the primary trajectory metric,
+checked against the committed ``results/bench/sweep_smoke.json`` record —
+a regression beyond ``SWEEP_SMOKE_BUDGET_X`` (default 3x, slack for
+machine variance) fails the smoke.  The refreshed record keeps any prior
+``--compare-host`` / ``--compare-segment`` fields, so plain CI runs don't
+clobber the recorded comparison evidence.
+
+``--compare-segment`` additionally times the same sweep over the PR 2
+per-segment host loop (``CMPConfig(timeline_backend="segment")``) and
+records the fused-timeline speedup.  ``--compare-host`` times the PR 1
+configuration (segment loop + host numpy allocator).  CI skips both to
+stay inside its wall-time budget; run them locally when touching the
+timeline or the allocator.
+
+    PYTHONPATH=src python -m benchmarks.sweep_smoke \\
+        [--compare-segment] [--compare-host]
+
+With ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` the same
+smoke exercises the multi-device path: the fused timelines shard their
+mix axis over the N forced host devices via ``repro.distributed``
+(that is the CI ``shard8`` job).
 """
 from __future__ import annotations
 
@@ -25,16 +41,21 @@ import os
 import time
 
 from benchmarks.common import RESULTS, emit
-from repro.core import allocator_calls
+from repro.core import (
+    allocator_calls,
+    device_dispatches,
+    reset_device_dispatches,
+)
 from repro.sim import MANAGER_NAMES, random_mixes, run_sweep
 from repro.sim.runner import CMPConfig
 
 DEFAULT_MIXES = 32
 DEFAULT_TOTAL_MS = 100.0
 
-#: Prior-record fields preserved across runs that skip ``--compare-host``.
+#: Prior-record fields preserved across runs that skip the comparisons.
 HOST_FIELDS = ("host_allocator_calls_host_path", "wall_s_host_alloc",
                "allocator_speedup_warm")
+SEGMENT_FIELDS = ("wall_s_segment_timeline", "fused_timeline_speedup_warm")
 
 
 def _prior_record() -> dict:
@@ -48,7 +69,7 @@ def _prior_record() -> dict:
 
 
 def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
-         compare_host: bool = False) -> None:
+         compare_host: bool = False, compare_segment: bool = False) -> None:
     prior = _prior_record()
     mixes = random_mixes(n_mixes, 16, seed=1)
 
@@ -66,22 +87,52 @@ def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
     if not summary["CBP"] > summary["baseline"]:
         raise RuntimeError(f"CBP does not beat baseline: {summary}")
 
-    # Second run with warm jit caches: the compile-free trajectory metric.
-    t0 = time.monotonic()
-    run_sweep(mixes, total_ms=total_ms)
-    wall_warm = time.monotonic() - t0
+    # Warm-jit runs: the compile-free trajectory metric (min of two), with
+    # the dispatch counter checking the one-program-per-timeline contract
+    # (n_managers fused timelines + 1 baseline evaluation) on each run.
+    wall_warm = float("inf")
+    dispatch_budget = len(MANAGER_NAMES) + 1
+    for _ in range(2):
+        reset_device_dispatches()
+        t0 = time.monotonic()
+        run_sweep(mixes, total_ms=total_ms)
+        wall_warm = min(wall_warm, time.monotonic() - t0)
+        dispatches = device_dispatches()
+        if dispatches > dispatch_budget:
+            raise RuntimeError(
+                f"fused sweep launched {dispatches} device programs; the "
+                f"one-per-(manager, timeline) contract allows "
+                f"{dispatch_budget}")
 
     derived = {
         "n_mixes": n_mixes,
         "n_managers": len(MANAGER_NAMES),
         "total_ms": total_ms,
         "host_allocator_calls": host_calls,
+        "device_dispatches_warm": dispatches,
+        "dispatch_budget": dispatch_budget,
         "wall_s_device_alloc_warm": round(wall_warm, 3),
         "wall_s_device_alloc_cold": round(wall_cold, 3),
         "cbp_geomean_ws": summary["CBP"],
     }
+    if compare_segment:
+        cfg = CMPConfig(timeline_backend="segment")
+        run_sweep(mixes, total_ms=total_ms, config=cfg)  # warm its jits
+        wall_seg = float("inf")
+        for _ in range(2):
+            t0 = time.monotonic()
+            run_sweep(mixes, total_ms=total_ms, config=cfg)
+            wall_seg = min(wall_seg, time.monotonic() - t0)
+        derived.update({
+            "wall_s_segment_timeline": round(wall_seg, 3),
+            "fused_timeline_speedup_warm": round(
+                wall_seg / max(wall_warm, 1e-9), 2),
+        })
+    else:
+        derived.update({k: prior[k] for k in SEGMENT_FIELDS if k in prior})
     if compare_host:
-        cfg = CMPConfig(allocator_backend="numpy")
+        cfg = CMPConfig(allocator_backend="numpy",
+                        timeline_backend="segment")
         t0 = time.monotonic()
         before = allocator_calls()
         run_sweep(mixes, total_ms=total_ms, config=cfg)
@@ -117,5 +168,6 @@ if __name__ == "__main__":
     ap.add_argument("--mixes", type=int, default=DEFAULT_MIXES)
     ap.add_argument("--total-ms", type=float, default=DEFAULT_TOTAL_MS)
     ap.add_argument("--compare-host", action="store_true")
+    ap.add_argument("--compare-segment", action="store_true")
     args = ap.parse_args()
-    main(args.mixes, args.total_ms, args.compare_host)
+    main(args.mixes, args.total_ms, args.compare_host, args.compare_segment)

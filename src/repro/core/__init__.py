@@ -8,7 +8,12 @@ The three local controllers (paper §3.2) and the coordination mechanism
 adaptation — see DESIGN.md §2).
 """
 from repro.core.atd import SampledATD, StackDistanceMonitor
-from repro.core.bandwidth_controller import BandwidthController, allocate_bandwidth
+from repro.core.bandwidth_controller import (
+    BandwidthController,
+    allocate_bandwidth,
+    allocate_bandwidth_jax,
+    check_bandwidth_floor,
+)
 from repro.core.cache_controller import (
     CacheController,
     allocator_calls,
@@ -22,7 +27,16 @@ from repro.core.coordinator import (
     ScheduleSegment,
     fig8_schedule,
 )
-from repro.core.prefetch_controller import PrefetchController, throttle_decision
+from repro.core.dispatch import (
+    device_dispatches,
+    record_dispatch,
+    reset_device_dispatches,
+)
+from repro.core.prefetch_controller import (
+    PrefetchController,
+    throttle_decision,
+    throttle_decision_jax,
+)
 from repro.core.types import Allocation, CBPParams, IntervalStats, Mode, PrefetchMode
 
 __all__ = [
@@ -30,6 +44,8 @@ __all__ = [
     "StackDistanceMonitor",
     "BandwidthController",
     "allocate_bandwidth",
+    "allocate_bandwidth_jax",
+    "check_bandwidth_floor",
     "CacheController",
     "allocator_calls",
     "cppf_allocate",
@@ -39,8 +55,12 @@ __all__ = [
     "Plant",
     "ScheduleSegment",
     "fig8_schedule",
+    "device_dispatches",
+    "record_dispatch",
+    "reset_device_dispatches",
     "PrefetchController",
     "throttle_decision",
+    "throttle_decision_jax",
     "Allocation",
     "CBPParams",
     "IntervalStats",

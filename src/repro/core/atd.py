@@ -42,9 +42,13 @@ class SampledATD:
                 f"expected {self._counters.shape}, got {curves.shape}")
         self._counters += curves
 
-    def halve(self) -> None:
-        """Decay history so recent behaviour dominates (paper §3.3)."""
-        self._counters *= 0.5
+    def halve(self, decay: float = 0.5) -> None:
+        """Decay history so recent behaviour dominates (paper §3.3).
+
+        ``decay`` defaults to the paper's halving; callers wire it from
+        ``CBPParams.atd_decay`` so the constant is sweepable.
+        """
+        self._counters *= decay
 
     def utility_curves(self) -> np.ndarray:
         """Current hits-vs-units estimate, shape (n_clients, units + 1)."""

@@ -5,6 +5,13 @@ delay observed in the previous interval: clients that waited longer get more.
 Every client first receives ``min_bandwidth_allocation`` ("in order to avoid
 unfairly giving a very low allocation to applications with a small queuing
 delay"); the remainder is split pro-rata by accumulated delay.
+
+:func:`allocate_bandwidth` is the numpy golden reference;
+:func:`allocate_bandwidth_jax` is the traced mirror used inside the fused
+Fig. 8 timeline (:mod:`repro.sim.timeline_jax`).  The ``min_allocation * n
+> total`` feasibility check is deliberately hoisted out of the traced
+mirror — callers validate once on the host (:func:`check_bandwidth_floor`)
+before compiling a timeline.
 """
 from __future__ import annotations
 
@@ -34,8 +41,7 @@ def allocate_bandwidth(
     delay = np.asarray(queuing_delay, dtype=np.float64)
     n = delay.shape[-1]
     min_alloc = np.asarray(min_allocation, dtype=np.float64)
-    if np.any(min_alloc * n > total_bandwidth):
-        raise ValueError("min_allocation * n exceeds total bandwidth")
+    check_bandwidth_floor(min_alloc, n, total_bandwidth)
 
     # line 2: remaining after floors (line 5: every client gets the floor)
     remaining = total_bandwidth - min_alloc * n
@@ -46,6 +52,39 @@ def allocate_bandwidth(
     share = np.where(total_delay > 0,
                      delay / np.where(total_delay > 0, total_delay, 1.0),
                      1.0 / n)
+    return min_alloc + share * remaining
+
+
+def check_bandwidth_floor(min_allocation, n_clients: int,
+                          total_bandwidth: float) -> None:
+    """Host-side feasibility check for Algorithm 1 (raises ``ValueError``).
+
+    Kept out of the traced :func:`allocate_bandwidth_jax` so the fused
+    timeline validates once per program instead of per segment.
+    """
+    if np.any(np.asarray(min_allocation, dtype=np.float64) * n_clients
+              > total_bandwidth):
+        raise ValueError("min_allocation * n exceeds total bandwidth")
+
+
+def allocate_bandwidth_jax(queuing_delay, total_bandwidth, min_allocation):
+    """Traced JAX mirror of :func:`allocate_bandwidth` (no feasibility check).
+
+    Same op-for-op arithmetic over ``jax.numpy`` so the fused timeline's
+    bandwidth decisions match the numpy reference bit-for-bit (property
+    parity: ``tests/test_controllers_jax.py``).  ``min_allocation`` may be
+    a scalar or a ``(..., 1)`` array of per-row floors.
+    """
+    import jax.numpy as jnp
+
+    delay = jnp.asarray(queuing_delay)
+    n = delay.shape[-1]
+    min_alloc = jnp.asarray(min_allocation, dtype=delay.dtype)
+    remaining = total_bandwidth - min_alloc * n
+    total_delay = delay.sum(axis=-1, keepdims=True)
+    share = jnp.where(total_delay > 0,
+                      delay / jnp.where(total_delay > 0, total_delay, 1.0),
+                      1.0 / n)
     return min_alloc + share * remaining
 
 

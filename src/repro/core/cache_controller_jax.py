@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import record_dispatch
+
 try:  # pragma: no cover - present on every supported JAX
     from jax.experimental import enable_x64 as _enable_x64
 except ImportError:  # pragma: no cover
@@ -158,8 +160,15 @@ def _greedy_core(
         stuck = stuck | (ready & ~(mu_sel > 0.0))
         return alloc, balance, stuck, mu_c, k_c, dirty, it + 1
 
+    def body_pair(state):
+        # Two body applications per while trip: once a row is finished
+        # (balance exhausted or stuck) body is a no-op for it, so pairing
+        # preserves the exact greedy trajectory while halving the loop's
+        # per-trip overhead on CPU (the trips are tiny-op bound).
+        return body(body(state))
+
     alloc, balance, _stuck, _mu, _k, _dirty, _it = jax.lax.while_loop(
-        cond, body,
+        cond, body_pair,
         (alloc0, balance0, stuck0, mu_c0, k_c0, dirty0, jnp.int32(0)))
 
     # ---- zero-utility spread (reference's even-spread branch) -------- #
@@ -177,6 +186,44 @@ def _greedy_core(
     need = balance > 0
     alloc = jnp.where((need[:, None]) & active, alloc + share, alloc)
     return alloc
+
+
+def lookahead_traced(curves, min_units, total_units: int):
+    """Traced Lookahead over ``(B, n, U+1)`` curves -> ``(B, n)`` int32.
+
+    For use *inside* jitted programs (the fused Fig. 8 timeline scans over
+    this at every reconfiguration boundary).  ``curves`` must already be
+    float64 and ``min_units`` an integer ``(B,)`` array; the host-side
+    feasibility checks are the caller's responsibility (hoisted out of the
+    traced region, see :mod:`repro.sim.timeline_jax`).
+    """
+    B, n, _ = curves.shape
+    return _greedy_core(
+        curves, min_units, jnp.ones((B, n), dtype=bool),
+        jnp.full((B,), total_units, dtype=jnp.int32),
+        total_units=total_units)
+
+
+def lookahead_masked_traced(curves, min_units, active, total_units: int):
+    """Traced CPpf allocation (:func:`lookahead_allocate_masked` inside jit).
+
+    Pins inactive clients at the floor and runs the greedy over the active
+    subset; the all-inactive fallback (even split, remainder to the lowest
+    indices) is folded in as a ``where`` so the whole decision stays on
+    device.
+    """
+    B, n, _ = curves.shape
+    min32 = min_units.astype(jnp.int32)
+    remaining = (total_units
+                 - min32 * (n - active.sum(axis=-1).astype(jnp.int32)))
+    out = _greedy_core(curves, min_units, active, remaining,
+                       total_units=total_units)
+    none_active = ~active.any(axis=-1)
+    extra = total_units - n * min32
+    even = (min32[:, None] + extra[:, None] // n
+            + (jnp.arange(n, dtype=jnp.int32)[None, :]
+               < (extra % n)[:, None]))
+    return jnp.where(none_active[:, None], even, out)
 
 
 def _validate(curves: np.ndarray, total_units: int,
@@ -216,6 +263,7 @@ def lookahead_allocate(
     batch_shape, flat, mus = _flatten(curves, min_units)
     _validate(curves, total_units, mus)
     B, n, _ = flat.shape
+    record_dispatch()
     with _x64_context():
         out = _greedy_core(
             jnp.asarray(flat, dtype=jnp.float64),
@@ -250,6 +298,7 @@ def lookahead_allocate_masked(
     # after pinning — column `remaining` is that slice's last column, which
     # the spread key reads.
     remaining = total_units - mus * (n - act.sum(axis=-1))
+    record_dispatch()
     with _x64_context():
         out = _greedy_core(
             jnp.asarray(flat, dtype=jnp.float64),

@@ -141,7 +141,8 @@ class CBPCoordinator:
             plant.total_cache_units, self.params.min_ways,
             backend=getattr(plant, "allocator_backend", "numpy"))
         self.bw_ctl = BandwidthController(
-            plant.total_bandwidth, self.params.min_bandwidth_allocation)
+            plant.total_bandwidth, self.params.min_bandwidth_allocation,
+            decay=self.params.bandwidth_delay_decay)
         self.pf_ctl = PrefetchController(n, self.params.speedup_threshold)
         self.history: List[IntervalRecord] = []
         self._t_ms = 0.0
@@ -184,7 +185,7 @@ class CBPCoordinator:
             # receive less cache.
             self.alloc.cache_units = self.cache_ctl.allocate(
                 self.atd.utility_curves())
-        self.atd.halve()
+        self.atd.halve(self.params.atd_decay)
         if self.bandwidth_mode == Mode.DYNAMIC:
             # Interactions #1/#2: delays reflect cache allocation and
             # prefetch misses of the prior interval.

@@ -1,0 +1,33 @@
+"""Device-dispatch counter for the sweep substrate.
+
+Every host->device program invocation on the sweep hot path (the jitted
+interval model, the batched Lookahead allocator, and the fused Fig. 8
+timeline) records itself here.  Tests and the CI sweep smoke use the
+counter to enforce the PR 3 contract: a full ``run_sweep`` over the
+Table-3 managers is **one device program per (manager, timeline)** plus a
+single baseline evaluation — zero per-segment dispatches or host
+round-trips.
+
+This counts Python-level jitted-entry invocations (the unit the host loop
+pays for), not XLA-internal executions; it is the batched analogue of
+:func:`repro.core.cache_controller.allocator_calls`.
+"""
+from __future__ import annotations
+
+_DISPATCHES = 0
+
+
+def device_dispatches() -> int:
+    """Total counted device-program invocations in this process."""
+    return _DISPATCHES
+
+
+def reset_device_dispatches() -> None:
+    global _DISPATCHES
+    _DISPATCHES = 0
+
+
+def record_dispatch(n: int = 1) -> None:
+    """Called by the jitted-entry wrappers; ``n`` programs launched."""
+    global _DISPATCHES
+    _DISPATCHES += n

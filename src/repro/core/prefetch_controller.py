@@ -37,6 +37,21 @@ def throttle_decision(
     return speedup > speedup_threshold  # lines 3-6
 
 
+def throttle_decision_jax(perf_with, perf_without, speedup_threshold=1.05):
+    """Traced JAX mirror of :func:`throttle_decision`.
+
+    Used inside the fused Fig. 8 timeline (:mod:`repro.sim.timeline_jax`)
+    so the per-client A/B decision happens on device; same arithmetic as
+    the numpy reference (property parity: ``tests/test_controllers_jax.py``).
+    """
+    import jax.numpy as jnp
+
+    w = jnp.asarray(perf_with)
+    wo = jnp.asarray(perf_without, dtype=w.dtype)
+    speedup = jnp.where(wo > 0, w / jnp.maximum(wo, 1e-12), 1.0)
+    return speedup > jnp.asarray(speedup_threshold, dtype=w.dtype)
+
+
 class PrefetchController:
     """Stateful wrapper tracking the current per-client setting."""
 

@@ -81,7 +81,17 @@ class IntervalStats:
 
 @dataclasses.dataclass
 class CBPParams:
-    """CBP tunables (paper Table 1, bottom block)."""
+    """CBP tunables (paper Table 1, bottom block).
+
+    The two decay constants govern how fast controller history washes out:
+    ``atd_decay`` scales the ATD utility counters at every reconfiguration
+    (paper §3.3, "the ATD values will be halved" — 0.5 is the paper's
+    halving) and ``bandwidth_delay_decay`` is the
+    :class:`~repro.core.BandwidthController` accumulator decay applied per
+    observed interval.  Both default to the paper's 0.5 (pinned by
+    ``tests/test_timeline_fused.py``) and are sweepable via
+    ``run_sweep(param_grid=...)``.
+    """
 
     reconfiguration_interval_ms: float = 10.0
     prefetch_sampling_period_ms: float = 0.5
@@ -89,3 +99,5 @@ class CBPParams:
     prefetch_interval_ms: float = 10.0
     min_bandwidth_allocation: float = 1.0   # GB/s
     min_ways: int = 4                       # allocation quanta floor
+    atd_decay: float = 0.5                  # ATD scale at reconfiguration
+    bandwidth_delay_decay: float = 0.5      # queuing-delay accumulator decay

@@ -52,6 +52,36 @@ def shard_map(worker, mesh, in_specs, out_specs):
     return exp_shard_map(worker, mesh=mesh, in_specs=in_specs,
                          out_specs=out_specs, check_rep=False)
 
+def row_shard_count(n_rows: int) -> int:
+    """How many ways a leading batch axis of ``n_rows`` should shard.
+
+    Uses every visible device (``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` forces N host devices for local testing); returns 1
+    when a single device is present or the batch is empty, which callers
+    treat as "skip shard_map entirely".
+    """
+    if n_rows <= 0:
+        return 1
+    return max(1, jax.device_count())
+
+
+def shard_rows(worker, n_shards: int, axis_name: str = "mix"):
+    """shard_map ``worker(sharded_tree, replicated_tree)`` over rows.
+
+    Builds a 1-D mesh of ``n_shards`` devices and maps the worker with the
+    first argument's leaves sharded on their leading axis (every leaf must
+    carry the batch axis, padded to a multiple of ``n_shards`` by the
+    caller) and the second argument replicated.  This is how the fused
+    Fig. 8 timeline (:mod:`repro.sim.timeline_jax`) spreads the mix axis
+    of hundreds-of-mixes sweeps across devices.
+    """
+    mesh = make_mesh((n_shards,), (axis_name,))
+    return shard_map(
+        worker, mesh,
+        in_specs=(PartitionSpec(axis_name), PartitionSpec()),
+        out_specs=PartitionSpec(axis_name))
+
+
 # Logical axis groups: "dp" spreads over every data-parallel mesh axis.
 DP_AXES = ("pod", "data")
 

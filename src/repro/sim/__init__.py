@@ -35,12 +35,12 @@ _SWEEP_EXPORTS = (
 
 
 def __getattr__(name):
-    if name in _SWEEP_EXPORTS or name == "memsys_jax":
+    if name in ("memsys_jax", "timeline_jax"):
         import importlib
-        module = importlib.import_module(
-            "repro.sim.memsys_jax" if name == "memsys_jax"
-            else "repro.sim.sweep")
-        return module if name == "memsys_jax" else getattr(module, name)
+        return importlib.import_module(f"repro.sim.{name}")
+    if name in _SWEEP_EXPORTS:
+        import importlib
+        return getattr(importlib.import_module("repro.sim.sweep"), name)
     raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")
 
 __all__ = [

@@ -123,7 +123,7 @@ def _run_cppf(plant: CMPPlant, total_ms: float,
         # Reallocate: friendly pinned at min; UCP for the rest over the
         # remaining capacity.
         curves = atd.utility_curves()
-        atd.halve()
+        atd.halve(params.atd_decay)
         units = cache_ctl.allocate_masked(curves, ~friendly)
     return ManagerResult(
         name="CPpf", ipc=ipc_acc / w_acc,

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dispatch import record_dispatch
 from repro.sim.apps import MODEL_FIELDS, AppArrays
 from repro.sim.memsys import (
     DAMPING,
@@ -166,6 +167,7 @@ def evaluate(
     the fields to bring them to host.
     """
     params = app_params(apps)
+    record_dispatch()
     with x64_context():
         f64 = functools.partial(jnp.asarray, dtype=jnp.float64)
         p = {k: f64(v) for k, v in params.items()}
@@ -212,6 +214,7 @@ def utility_curves(
     accepts leading batch axes on every argument.
     """
     params = app_params(apps)
+    record_dispatch()
     with x64_context():
         f64 = functools.partial(jnp.asarray, dtype=jnp.float64)
         p = {k: f64(v) for k, v in params.items()}

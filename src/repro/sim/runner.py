@@ -28,6 +28,16 @@ class CMPConfig:
     #: backend (and resolves to "jax" on the batched sweep plant, keeping
     #: whole sweeps device-resident); "numpy"/"jax" force one side.
     allocator_backend: str = "auto"
+    #: How the batched sweep executes a manager's Fig. 8 timeline.  "fused"
+    #: compiles the whole timeline into one jitted device program per
+    #: (manager, timeline) — zero per-segment host transfers
+    #: (:mod:`repro.sim.timeline_jax`); "segment" keeps the PR 2 host loop
+    #: of one device call per segment (the parity/debug path).  "auto"
+    #: fuses unless the allocator is forced onto the host
+    #: (``allocator_backend="numpy"``), which implies the segment loop —
+    #: the fused program's greedy is traced and cannot honour a host
+    #: allocator.
+    timeline_backend: str = "auto"
 
 
 def _resolve_allocator_backend(config: CMPConfig, default: str) -> str:
@@ -36,6 +46,15 @@ def _resolve_allocator_backend(config: CMPConfig, default: str) -> str:
         backend = default
     if backend not in ("numpy", "jax"):
         raise ValueError(f"unknown allocator backend {backend!r}")
+    return backend
+
+
+def _resolve_timeline_backend(config: CMPConfig, default: str = "fused") -> str:
+    backend = config.timeline_backend
+    if backend == "auto":
+        backend = default
+    if backend not in ("fused", "segment"):
+        raise ValueError(f"unknown timeline backend {backend!r}")
     return backend
 
 

@@ -16,17 +16,27 @@ per-mix host allocator calls (assert with
 Fig. 8 segment.  CPpf's friendly-mask allocation is vectorized the same
 way (`CacheController.allocate_masked`).
 
+Since PR 3 the whole Fig. 8 timeline of each manager is ONE jitted device
+program (:mod:`repro.sim.timeline_jax`): the bandwidth controller and the
+prefetch throttle run inside the scan next to the batched Lookahead
+allocator, so a full sweep performs zero per-segment host transfers (one
+dispatch per (manager, timeline) — counter:
+:func:`repro.core.device_dispatches`) and large mix batches shard across
+devices via :mod:`repro.distributed`.  The PR 2 per-segment host loop is
+kept as the ``CMPConfig(timeline_backend="segment")`` parity/debug path.
+
 Structure:
 
 * :class:`BatchedCMPPlant` — the CMP interval model over M stacked mixes;
   ``run_interval`` takes (M, n) allocation arrays and returns (M, n) stats.
 * :class:`BatchedCoordinator` — :class:`~repro.core.CBPCoordinator`
   vectorized over the mix axis.  It executes exactly the same
-  :func:`~repro.core.fig8_schedule` segment list, so scalar and batched
-  trajectories cannot drift apart on scheduling.  ``params_rows`` lets
-  each batch row carry its own non-schedule ``CBPParams`` (min_ways,
-  speedup_threshold, min_bandwidth_allocation), which is how
-  ``param_grid`` sweeps batch the Fig. 12 design space.
+  :func:`~repro.core.fig8_schedule` segment list (fused into one program
+  by default), so scalar and batched trajectories cannot drift apart on
+  scheduling.  ``params_rows`` lets each batch row carry its own
+  non-schedule ``CBPParams`` (min_ways, speedup_threshold,
+  min_bandwidth_allocation, atd_decay, bandwidth_delay_decay), which is
+  how ``param_grid`` sweeps batch the Fig. 12 design space.
 * :func:`run_sweep` — evaluate a set of managers over a set of mixes (and
   optionally a leading ``CBPParams`` axis via ``param_grid=``); returns a
   :class:`SweepResult` with per-mix IPC, weighted speedup and ANTT against
@@ -34,8 +44,8 @@ Structure:
 
 Parity contract: with the same mixes and parameters, per-mix results match
 the scalar numpy path up to the 1e-5 model tolerance (and bit-identical
-controller decisions away from knife-edges) — see ``tests/test_sim_sweep.py``
-and ``tests/test_cache_controller_jax.py``.
+controller decisions away from knife-edges) — see ``tests/test_sim_sweep.py``,
+``tests/test_timeline_fused.py`` and ``tests/test_cache_controller_jax.py``.
 """
 from __future__ import annotations
 
@@ -55,10 +65,43 @@ from repro.core import (
     throttle_decision,
 )
 from repro.core.types import IntervalStats
-from repro.sim import memsys, memsys_jax
+from repro.sim import memsys, memsys_jax, timeline_jax
 from repro.sim.apps import AppArrays, stack_mixes
 from repro.sim.managers import MANAGER_NAMES, TABLE3_MODES
-from repro.sim.runner import CMPConfig, _resolve_allocator_backend
+from repro.sim.runner import (
+    CMPConfig,
+    _resolve_allocator_backend,
+    _resolve_timeline_backend,
+)
+
+
+class CapacityInvariantError(RuntimeError):
+    """An allocation violated its sums-to-capacity invariant.
+
+    Raised (never ``assert``-ed: the check must survive ``python -O``)
+    when a batched cache allocation does not sum to ``total_cache_units``
+    per mix, or a dynamic bandwidth allocation does not sum to
+    ``total_bandwidth``.
+    """
+
+
+def _check_units_capacity(units: np.ndarray, total_units: int,
+                          where: str) -> None:
+    sums = np.asarray(units).sum(axis=-1)
+    if not (sums == total_units).all():
+        raise CapacityInvariantError(
+            f"{where}: cache allocation sums {np.unique(sums)} != "
+            f"total_cache_units {total_units}")
+
+
+def _check_bandwidth_capacity(bandwidth: np.ndarray, total_bandwidth: float,
+                              where: str) -> None:
+    sums = np.asarray(bandwidth).sum(axis=-1)
+    if not np.allclose(sums, total_bandwidth, rtol=1e-9, atol=1e-6):
+        raise CapacityInvariantError(
+            f"{where}: bandwidth allocation sums in "
+            f"[{sums.min()}, {sums.max()}] != total_bandwidth "
+            f"{total_bandwidth}")
 
 
 class BatchedCMPPlant:
@@ -78,9 +121,16 @@ class BatchedCMPPlant:
         # config.backend selects the SCALAR plant's model implementation;
         # the batched plant is the JAX path by construction and uses the
         # remaining CMPConfig fields (capacities, llc_extra_cycles) as-is.
-        # The allocator follows suit: "auto" keeps allocation on device.
+        # The allocator follows suit: "auto" keeps allocation on device,
+        # and "auto" timelines fuse into one device program per manager —
+        # unless the allocator was forced onto the host, which only the
+        # segment loop can honour (the fused greedy is traced).
         self.allocator_backend = _resolve_allocator_backend(
             self.config, default="jax")
+        self.timeline_backend = _resolve_timeline_backend(
+            self.config,
+            default="fused" if self.allocator_backend == "jax"
+            else "segment")
         self.n_mixes, self.n_clients = np.asarray(self.apps.cpi_base).shape
         self.total_cache_units = self.config.total_cache_units
         self.total_bandwidth = self.config.total_bandwidth
@@ -126,21 +176,46 @@ def baseline_ipc_batched(plant: BatchedCMPPlant) -> np.ndarray:
     return np.asarray(plant.evaluate(alloc).ipc)
 
 
+@dataclasses.dataclass
+class RowParams:
+    """Per-batch-row ``CBPParams`` tunables, broadcast-ready.
+
+    ``schedule`` carries the schedule-shaping fields (common to the whole
+    batch); the five non-schedule tunables are scalars without
+    ``params_rows`` and per-row arrays with it — min_ways ``(M,)``,
+    speedup_threshold / min_bandwidth_allocation / bandwidth_delay_decay
+    ``(M, 1)`` (broadcasting against (M, n) state) and atd_decay
+    ``(M, 1, 1)`` (against the (M, n, U+1) ATD counters).
+    """
+
+    schedule: CBPParams
+    min_ways: object
+    speedup_threshold: object
+    min_bandwidth_allocation: object
+    atd_decay: object
+    bandwidth_delay_decay: object
+
+
 def _per_row_params(
     params: CBPParams,
     params_rows: Optional[Sequence[CBPParams]],
     n_rows: int,
-) -> Tuple[CBPParams, object, object, object]:
-    """Resolve (schedule_params, min_ways, speedup_threshold, min_bw).
+) -> RowParams:
+    """Resolve the per-row tunables of a (possibly params-batched) sweep.
 
-    With ``params_rows`` the three non-schedule tunables become per-row
-    arrays (min_ways (M,), the other two (M, 1) for broadcasting); the
-    schedule-shaping fields must agree across rows because every batch row
-    executes the same Fig. 8 segment list in lockstep.
+    With ``params_rows`` the non-schedule tunables become per-row arrays;
+    the schedule-shaping fields must agree across rows because every batch
+    row executes the same Fig. 8 segment list in lockstep.
     """
     if params_rows is None:
-        return (params, params.min_ways, params.speedup_threshold,
-                params.min_bandwidth_allocation)
+        return RowParams(
+            schedule=params,
+            min_ways=params.min_ways,
+            speedup_threshold=params.speedup_threshold,
+            min_bandwidth_allocation=params.min_bandwidth_allocation,
+            atd_decay=params.atd_decay,
+            bandwidth_delay_decay=params.bandwidth_delay_decay,
+        )
     rows = list(params_rows)
     if len(rows) != n_rows:
         raise ValueError(
@@ -152,10 +227,17 @@ def _per_row_params(
             "params_rows must share reconfiguration_interval_ms and "
             "prefetch_sampling_period_ms (the Fig. 8 schedule is common to "
             f"the whole batch); got {sorted(sched)}")
-    min_ways = np.array([p.min_ways for p in rows], dtype=np.int64)
-    thr = np.array([p.speedup_threshold for p in rows])[:, None]
-    min_bw = np.array([p.min_bandwidth_allocation for p in rows])[:, None]
-    return rows[0], min_ways, thr, min_bw
+    return RowParams(
+        schedule=rows[0],
+        min_ways=np.array([p.min_ways for p in rows], dtype=np.int64),
+        speedup_threshold=np.array(
+            [p.speedup_threshold for p in rows])[:, None],
+        min_bandwidth_allocation=np.array(
+            [p.min_bandwidth_allocation for p in rows])[:, None],
+        atd_decay=np.array([p.atd_decay for p in rows])[:, None, None],
+        bandwidth_delay_decay=np.array(
+            [p.bandwidth_delay_decay for p in rows])[:, None],
+    )
 
 
 class BatchedCoordinator:
@@ -187,13 +269,10 @@ class BatchedCoordinator:
         self.prefetch_mode = prefetch_mode
 
         m, n = plant.n_mixes, plant.n_clients
-        self.params, self._min_ways, self._thr, min_bw = _per_row_params(
-            params or CBPParams(), params_rows, m)
-        self.cache_ctl = CacheController(
-            plant.total_cache_units, self.params.min_ways,
-            backend=plant.allocator_backend)
-        self._atd = np.zeros((m, n, plant.total_cache_units + 1))
-        self.bw_ctl = BandwidthController(plant.total_bandwidth, min_bw)
+        self.rows = _per_row_params(params or CBPParams(), params_rows, m)
+        self.params = self.rows.schedule
+        self._min_ways = self.rows.min_ways
+        self._thr = self.rows.speedup_threshold
         self._ipc_acc = np.zeros((m, n))
         self._w_acc = 0.0
 
@@ -222,7 +301,7 @@ class BatchedCoordinator:
         if self.cache_mode == Mode.DYNAMIC:
             self.alloc.cache_units = self.cache_ctl.allocate(
                 self._atd, min_units=self._min_ways)
-        self._atd *= 0.5
+        self._atd *= self.rows.atd_decay
         if self.bandwidth_mode == Mode.DYNAMIC:
             self.alloc.bandwidth = self.bw_ctl.allocate()
 
@@ -235,10 +314,72 @@ class BatchedCoordinator:
     # ------------------------------------------------------------------ #
 
     def run(self, total_ms: float) -> None:
-        stats_off: Optional[IntervalStats] = None
+        """Execute the Fig. 8 timeline over every batch row.
+
+        The default ("fused") path compiles the whole timeline — every
+        controller decision included — into one jitted device program
+        (:func:`repro.sim.timeline_jax.run_timeline`); the "segment" path
+        is the PR 2 host loop of one device call per segment, kept for
+        parity testing and debugging.  Both execute the identical
+        :func:`~repro.core.fig8_schedule` segment list.
+        """
         schedule = fig8_schedule(
             total_ms, self.params,
             self.prefetch_mode == PrefetchMode.DYNAMIC)
+        if self.plant.timeline_backend == "fused":
+            self._run_fused(schedule)
+        else:
+            self._run_segments(schedule)
+        if self.cache_mode == Mode.DYNAMIC:
+            _check_units_capacity(
+                self.alloc.cache_units, self.plant.total_cache_units,
+                "BatchedCoordinator.run")
+        if self.bandwidth_mode == Mode.DYNAMIC:
+            _check_bandwidth_capacity(
+                self.alloc.bandwidth, self.plant.total_bandwidth,
+                "BatchedCoordinator.run")
+
+    def _run_fused(self, schedule) -> None:
+        res = timeline_jax.run_timeline(
+            self.plant.apps, schedule,
+            variant="fig8",
+            init_units=self.alloc.cache_units,
+            init_bandwidth=self.alloc.bandwidth,
+            init_prefetch=self.alloc.prefetch_on,
+            cache_dynamic=self.cache_mode == Mode.DYNAMIC,
+            bandwidth_dynamic=self.bandwidth_mode == Mode.DYNAMIC,
+            cache_partitioned=self.cache_mode != Mode.UNPARTITIONED,
+            bandwidth_partitioned=self.bandwidth_mode != Mode.UNPARTITIONED,
+            total_units=self.plant.total_cache_units,
+            total_bandwidth=self.plant.total_bandwidth,
+            llc_extra_cycles=self.plant.config.llc_extra_cycles,
+            min_ways=self._min_ways,
+            speedup_threshold=self._thr,
+            min_bandwidth_allocation=self.rows.min_bandwidth_allocation,
+            atd_decay=self.rows.atd_decay,
+            bandwidth_delay_decay=self.rows.bandwidth_delay_decay,
+        )
+        self._ipc_acc = res.ipc_acc
+        self._w_acc = res.w_acc
+        self.alloc.cache_units = res.cache_units
+        self.alloc.bandwidth = res.bandwidth
+        self.alloc.prefetch_on = res.prefetch_on
+
+    def _run_segments(self, schedule) -> None:
+        # Host-side controller state exists only on this path: the fused
+        # program keeps the ATD counters, the delay accumulator and the
+        # greedy entirely on device, so building these in __init__ would
+        # leave ~1 MB of dead, stale arrays per fused coordinator.
+        plant = self.plant
+        m, n = plant.n_mixes, plant.n_clients
+        self.cache_ctl = CacheController(
+            plant.total_cache_units, self.params.min_ways,
+            backend=plant.allocator_backend)
+        self._atd = np.zeros((m, n, plant.total_cache_units + 1))
+        self.bw_ctl = BandwidthController(
+            plant.total_bandwidth, self.rows.min_bandwidth_allocation,
+            decay=self.rows.bandwidth_delay_decay)
+        stats_off: Optional[IntervalStats] = None
         for seg in schedule:
             if seg.kind == "reconfigure":
                 self._reconfigure()
@@ -262,15 +403,15 @@ def _run_cppf_batched(plant: BatchedCMPPlant, total_ms: float,
                       params_rows: Optional[Sequence[CBPParams]] = None):
     """Vectorized CPpf (mirrors ``managers._run_cppf`` per mix).
 
-    The friendly-mask allocation is ONE batched device call per
-    reconfiguration (``CacheController.allocate_masked``), replacing the
-    former per-mix Python loop.
+    On the fused path the probe + reallocation timeline is one jitted
+    device program (``timeline_jax.run_timeline(variant="cppf")``); on the
+    segment path each friendly-mask allocation is ONE batched device call
+    per reconfiguration (``CacheController.allocate_masked``).
     """
     m, n = plant.n_mixes, plant.n_clients
     total_units = plant.total_cache_units
-    params, min_ways, thr, _min_bw = _per_row_params(params, params_rows, m)
-    cache_ctl = CacheController(
-        total_units, params.min_ways, backend=plant.allocator_backend)
+    rows = _per_row_params(params, params_rows, m)
+    params = rows.schedule
     equal_units = np.full((m, n), total_units // n, dtype=np.int64)
     bw = np.full((m, n), plant.total_bandwidth / n)
 
@@ -279,13 +420,41 @@ def _run_cppf_batched(plant: BatchedCMPPlant, total_ms: float,
             cache_units=units, bandwidth=bw.copy(), prefetch_on=pf_on,
             cache_mode=Mode.DYNAMIC, bandwidth_mode=Mode.UNPARTITIONED)
 
+    def check(units: np.ndarray) -> None:
+        _check_units_capacity(units, total_units, "CPpf")
+        _check_bandwidth_capacity(bw, plant.total_bandwidth, "CPpf")
+
+    if plant.timeline_backend == "fused":
+        res = timeline_jax.run_timeline(
+            plant.apps, timeline_jax.cppf_schedule(total_ms, params),
+            variant="cppf",
+            init_units=equal_units,
+            init_bandwidth=bw,
+            init_prefetch=np.ones((m, n), dtype=bool),
+            cache_dynamic=True,
+            bandwidth_dynamic=False,
+            cache_partitioned=True,
+            bandwidth_partitioned=False,
+            total_units=total_units,
+            total_bandwidth=plant.total_bandwidth,
+            llc_extra_cycles=plant.config.llc_extra_cycles,
+            min_ways=rows.min_ways,
+            speedup_threshold=rows.speedup_threshold,
+            atd_decay=rows.atd_decay,
+            bandwidth_delay_decay=rows.bandwidth_delay_decay,
+        )
+        check(res.cache_units)
+        return res.mean_ipc(), make_alloc(res.cache_units, res.prefetch_on)
+
+    cache_ctl = CacheController(
+        total_units, params.min_ways, backend=plant.allocator_backend)
     off = plant.run_interval(
         make_alloc(equal_units, np.zeros((m, n), dtype=bool)),
         params.prefetch_sampling_period_ms)
     on = plant.run_interval(
         make_alloc(equal_units, np.ones((m, n), dtype=bool)),
         params.prefetch_sampling_period_ms)
-    friendly = throttle_decision(on.ipc, off.ipc, thr)
+    friendly = throttle_decision(on.ipc, off.ipc, rows.speedup_threshold)
 
     pf_on = np.ones((m, n), dtype=bool)
     units = equal_units.copy()
@@ -301,10 +470,10 @@ def _run_cppf_batched(plant: BatchedCMPPlant, total_ms: float,
         w_acc += dt
         t += dt
         curves = atd.copy()
-        atd *= 0.5
+        atd *= rows.atd_decay
         units = cache_ctl.allocate_masked(
-            curves, ~friendly, min_units=min_ways)
-        assert (units.sum(axis=-1) == total_units).all()
+            curves, ~friendly, min_units=rows.min_ways)
+        check(units)
     return ipc_acc / w_acc, make_alloc(units, pf_on)
 
 

@@ -1,0 +1,385 @@
+"""Fused Fig. 8 timeline: one jitted device program per (manager, timeline).
+
+PR 2 made every timeline *segment* a device call; this module removes the
+remaining host loop.  A manager's entire Fig. 8 decision timeline — cache
+reallocation (batched Lookahead greedy), Algorithm-1 bandwidth partitioning
+and Algorithm-2 prefetch throttling — compiles into a single
+``jax.lax.scan`` over a precomputed static segment table, carrying
+(cache units, bandwidth, prefetch mask, friendly mask, ATD accumulators,
+bandwidth-delay EMA, IPC accumulator, sampled off-IPC) as scan state.  A
+full Table-3 sweep is then **one device program per (manager, timeline)**:
+inputs transfer once, results transfer once, zero per-segment host
+round-trips (counter: :func:`repro.core.device_dispatches`).
+
+Segment table
+    :func:`segment_table` encodes a :func:`~repro.core.fig8_schedule`
+    segment list as (kind, duration, reconfigure?) arrays.  Zero-duration
+    ``reconfigure`` boundaries are folded into the *following* segment as a
+    flag (a trailing boundary becomes a zero-duration ``NOOP`` row), so
+    every scan step is: maybe-reconfigure, then run one interval of the
+    model and update controller state elementwise by segment kind.
+
+Controllers in the traced region
+    The cache step calls the PR 2 batched greedy
+    (:func:`repro.core.cache_controller_jax.lookahead_traced` /
+    ``lookahead_masked_traced`` for the CPpf variant); bandwidth uses
+    :func:`repro.core.allocate_bandwidth_jax` and prefetch
+    :func:`repro.core.throttle_decision_jax` — all batched over mixes and
+    ``param_grid`` rows, with the ``min_allocation * n > total``
+    feasibility checks hoisted out of the traced region (validated once on
+    the host per program).
+
+Sharding
+    The leading mix axis is sharded across devices with
+    :func:`repro.distributed.shard_rows` (``shard_map`` + ``make_mesh``)
+    whenever more than one device is visible — force N host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to test
+    locally.  Rows are padded to a multiple of the device count and the
+    padding is sliced off after the program returns, so results are
+    identical on 1 and N devices (``tests/test_timeline_fused.py``).
+
+Parity contract: fused trajectories match the PR 2 segment-loop path (and
+therefore the scalar numpy reference within its 1e-5 model tolerance) —
+bit-identical controller decisions away from knife-edges, enforced by
+``tests/test_timeline_fused.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import distributed
+from repro.core.bandwidth_controller import (
+    allocate_bandwidth_jax,
+    check_bandwidth_floor,
+)
+from repro.core.cache_controller_jax import (
+    lookahead_masked_traced,
+    lookahead_traced,
+)
+from repro.core.coordinator import ScheduleSegment
+from repro.core.dispatch import record_dispatch
+from repro.core.prefetch_controller import throttle_decision_jax
+from repro.sim import memsys_jax
+from repro.sim.apps import AppArrays
+from repro.sim.memsys import FIXED_POINT_ITERS
+
+#: Segment kinds of the fused table.  ``NOOP`` only appears as the carrier
+#: of a trailing reconfigure boundary (CPpf reallocates after its final
+#: interval); its zero-duration model evaluation never accumulates.
+SAMPLE_OFF, SAMPLE_ON, RUN, NOOP = 0, 1, 2, 3
+
+_KIND_CODES = {"sample_off": SAMPLE_OFF, "sample_on": SAMPLE_ON, "run": RUN}
+
+
+def segment_table(
+    schedule: Sequence[ScheduleSegment],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Encode a segment list as (kinds, durations_ms, reconfigure_flags).
+
+    ``reconfigure`` boundaries are zero-duration in the schedule; folding
+    each into the next segment's flag keeps the scan length equal to the
+    number of *intervals actually executed* and lets one scan step be
+    "maybe reconfigure, then run the segment".
+    """
+    rows: List[Tuple[int, float, bool]] = []
+    pending = False
+    for seg in schedule:
+        if seg.kind == "reconfigure":
+            pending = True
+            continue
+        rows.append((_KIND_CODES[seg.kind], seg.duration_ms, pending))
+        pending = False
+    if pending:
+        rows.append((NOOP, 0.0, True))
+    if not rows:
+        raise ValueError("cannot fuse an empty schedule")
+    kinds = np.array([r[0] for r in rows], dtype=np.int32)
+    durations = np.array([r[1] for r in rows], dtype=np.float64)
+    reconf = np.array([r[2] for r in rows], dtype=bool)
+    return kinds, durations, reconf
+
+
+def cppf_schedule(total_ms: float, params) -> List[ScheduleSegment]:
+    """CPpf's timeline as data (mirrors ``sweep._run_cppf_batched``).
+
+    An A/B friendliness probe at equal partitioning (excluded from the
+    time-weighted mean), then per reconfiguration interval: run, then
+    reallocate — including after the final interval, which is why the
+    segment list *ends* with a reconfigure boundary.
+    """
+    p = params.prefetch_sampling_period_ms
+    segments = [ScheduleSegment("sample_off", p),
+                ScheduleSegment("sample_on", p)]
+    t = 0.0
+    while t < total_ms - 1e-9:
+        dt = min(params.reconfiguration_interval_ms, total_ms - t)
+        segments.append(ScheduleSegment("run", dt))
+        segments.append(ScheduleSegment("reconfigure", 0.0))
+        t += dt
+    return segments
+
+
+@dataclasses.dataclass
+class TimelineResult:
+    """Final state of one fused (manager, timeline) program over M mixes."""
+
+    ipc_acc: np.ndarray        # (M, n) time-weighted IPC sum
+    w_acc: float               # accumulated weight (ms) — static per table
+    cache_units: np.ndarray    # (M, n) int64 final allocation
+    bandwidth: np.ndarray      # (M, n) final bandwidth split
+    prefetch_on: np.ndarray    # (M, n) bool final prefetcher setting
+    active: np.ndarray         # (M, n) bool CPpf competing mask (fig8: all)
+
+    def mean_ipc(self) -> np.ndarray:
+        return self.ipc_acc / max(self.w_acc, 1e-12)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_timeline(
+    variant: str,
+    cache_dynamic: bool,
+    bandwidth_dynamic: bool,
+    cache_partitioned: bool,
+    bandwidth_partitioned: bool,
+    has_sampling: bool,
+    total_units: int,
+    iters: int,
+    n_shards: int,
+):
+    """Build the jitted (optionally shard_mapped) timeline executor.
+
+    Cached per static configuration so repeated sweeps reuse both the
+    Python wrapper and XLA's compilation cache; jit retraces on new array
+    shapes (different M, n or segment count) as usual.  Controller state
+    that a manager's modes can never read (ATD counters without a dynamic
+    cache, the delay EMA without dynamic bandwidth, the A/B machinery
+    without sampling segments) is statically dropped from the step.
+    """
+    f64 = jnp.float64
+    total_cache_f = float(total_units)
+    track_atd = cache_dynamic  # CPpf is always cache-dynamic
+
+    def worker(sharded, replicated):
+        p = {k: sharded["p_" + k] for k in memsys_jax.PARAM_FIELDS}
+        min_ways = sharded["min_ways"]                  # (M,) int32
+        thr = sharded["speedup_threshold"]              # (M, 1)
+        min_bw = sharded["min_bandwidth_allocation"]    # (M, 1)
+        atd_decay = sharded["atd_decay"]                # (M, 1, 1)
+        bw_decay = sharded["bandwidth_delay_decay"]     # (M, 1)
+        total_bw = replicated["total_bandwidth"]
+        llc_extra = replicated["llc_extra_cycles"]
+
+        def reconfigure(operand):
+            """Boundary step: cache -> bandwidth (paper priority order)."""
+            units, bw, atd, bw_acc, active = operand
+            if cache_dynamic:
+                if variant == "cppf":
+                    fresh = lookahead_masked_traced(
+                        atd, min_ways, active, total_units)
+                else:
+                    fresh = lookahead_traced(atd, min_ways, total_units)
+                units = fresh.astype(units.dtype)
+            atd = atd * atd_decay
+            if bandwidth_dynamic:
+                bw = allocate_bandwidth_jax(bw_acc, total_bw, min_bw)
+            return units, bw, atd
+
+        def step(carry, seg):
+            kind, dt, reconf = seg
+            units, bw, pf, active, atd, bw_acc, ipc_acc, off_ipc = carry
+            units, bw, atd = jax.lax.cond(
+                reconf, reconfigure,
+                lambda op: (op[0], op[1], op[2]),
+                (units, bw, atd, bw_acc, active))
+
+            # The A/B samples force the prefetcher off/on for everyone;
+            # other segments run the current per-client setting.
+            if has_sampling:
+                pf_f = jnp.where(kind == SAMPLE_OFF, 0.0,
+                                 jnp.where(kind == SAMPLE_ON, 1.0,
+                                           pf.astype(f64)))
+            else:
+                pf_f = pf.astype(f64)
+            out = memsys_jax._evaluate_jit(
+                p, units.astype(f64), bw, pf_f,
+                jnp.asarray(total_cache_f, f64), total_bw, llc_extra,
+                cache_partitioned=cache_partitioned,
+                bandwidth_partitioned=bandwidth_partitioned,
+                iters=iters)
+            ipc, q_ns = out[0], out[1]
+
+            # fig8 accumulates every executed segment (samples included);
+            # CPpf's probe intervals are outside the measured window.
+            if variant == "cppf":
+                acc_dt = jnp.where(kind == RUN, dt, 0.0)
+            else:
+                acc_dt = dt
+            if track_atd:
+                curves = memsys_jax._utility_curves_jit(
+                    p, pf_f, ipc, jnp.asarray(1.0, f64),
+                    total_units=total_units)
+                atd = atd + curves * acc_dt
+            ipc_acc = ipc_acc + ipc * acc_dt
+            if bandwidth_dynamic:
+                bw_acc = bw_decay * bw_acc + q_ns * acc_dt
+
+            if has_sampling:
+                decision = throttle_decision_jax(ipc, off_ipc, thr)
+                if variant == "cppf":
+                    active = jnp.where(kind == SAMPLE_ON, ~decision, active)
+                else:
+                    pf = jnp.where(kind == SAMPLE_ON, decision, pf)
+                off_ipc = jnp.where(kind == SAMPLE_OFF, ipc, off_ipc)
+            return ((units, bw, pf, active, atd, bw_acc, ipc_acc, off_ipc),
+                    None)
+
+        carry0 = (sharded["units0"], sharded["bw0"], sharded["pf0"],
+                  sharded["active0"], sharded["atd0"], sharded["bw_acc0"],
+                  sharded["ipc_acc0"], sharded["off_ipc0"])
+        xs = (replicated["kinds"], replicated["durations"],
+              replicated["reconf"])
+        carry, _ = jax.lax.scan(step, carry0, xs)
+        units, bw, pf, active, _atd, _bw_acc, ipc_acc, _off = carry
+        return {"ipc_acc": ipc_acc, "cache_units": units, "bandwidth": bw,
+                "prefetch_on": pf, "active": active}
+
+    if n_shards > 1:
+        worker = distributed.shard_rows(worker, n_shards)
+    return jax.jit(worker)
+
+
+def _per_row(value, shape: Tuple[int, ...], dtype) -> np.ndarray:
+    """Materialize a scalar-or-per-row tunable at its full batch shape.
+
+    Per-row tunables must carry the leading mix axis explicitly so
+    ``shard_map`` can split them alongside the model state.
+    """
+    arr = np.asarray(value, dtype=dtype)
+    arr = arr.reshape(arr.shape + (1,) * (len(shape) - arr.ndim))
+    return np.ascontiguousarray(np.broadcast_to(arr, shape))
+
+
+def run_timeline(
+    apps: Union[AppArrays, dict],
+    schedule: Sequence[ScheduleSegment],
+    *,
+    variant: str = "fig8",
+    init_units: np.ndarray,
+    init_bandwidth: np.ndarray,
+    init_prefetch: np.ndarray,
+    cache_dynamic: bool,
+    bandwidth_dynamic: bool,
+    cache_partitioned: bool,
+    bandwidth_partitioned: bool,
+    total_units: int,
+    total_bandwidth: float,
+    llc_extra_cycles: float = 0.0,
+    min_ways=4,
+    speedup_threshold=1.05,
+    min_bandwidth_allocation=1.0,
+    atd_decay=0.5,
+    bandwidth_delay_decay=0.5,
+    iters: int = FIXED_POINT_ITERS,
+    shard: Optional[bool] = None,
+) -> TimelineResult:
+    """Execute one manager's whole timeline as ONE device program.
+
+    Args:
+      apps: mix-stacked application profiles, every field ``(M, n)``.
+      schedule: the Fig. 8 segment list (or :func:`cppf_schedule`).
+      variant: ``"fig8"`` (coordinator semantics) or ``"cppf"``.
+      init_units / init_bandwidth / init_prefetch: ``(M, n)`` step-0 state.
+      cache_dynamic / bandwidth_dynamic: whether the boundary controllers
+        fire (static — Table-3 manager modes).
+      min_ways / speedup_threshold / min_bandwidth_allocation / atd_decay /
+        bandwidth_delay_decay: scalars or per-row arrays (``param_grid``).
+      shard: ``None`` auto-shards the mix axis over all visible devices
+        (padding M as needed); ``False`` forces single-device execution.
+
+    Returns:
+      :class:`TimelineResult` of host arrays — the only device->host
+      transfer of the whole timeline.
+    """
+    if variant not in ("fig8", "cppf"):
+        raise ValueError(f"unknown timeline variant {variant!r}")
+    params = memsys_jax.app_params(apps)
+    shape = np.asarray(params["cpi_base"]).shape
+    if len(shape) != 2:
+        raise ValueError(f"apps must be mix-stacked (M, n); got {shape}")
+    M, n = shape
+
+    # Feasibility checks hoisted out of the traced region (the numpy
+    # controllers validate per call; the fused program validates once).
+    if bandwidth_dynamic:
+        check_bandwidth_floor(min_bandwidth_allocation, n, total_bandwidth)
+    if cache_dynamic and np.any(
+            np.asarray(min_ways, dtype=np.int64) * n > total_units):
+        raise ValueError("min_ways * n exceeds capacity")
+
+    kinds, durations, reconf = segment_table(schedule)
+    if variant == "cppf":
+        w_acc = float(durations[kinds == RUN].sum())
+    else:
+        w_acc = float(durations.sum())
+
+    sharded = {"p_" + k: np.ascontiguousarray(
+        np.broadcast_to(np.asarray(v, np.float64), (M, n)))
+        for k, v in params.items()}
+    sharded.update(
+        units0=np.asarray(init_units, dtype=np.int32),
+        bw0=np.asarray(init_bandwidth, dtype=np.float64),
+        pf0=np.asarray(init_prefetch, dtype=bool),
+        active0=np.ones((M, n), dtype=bool),
+        atd0=np.zeros((M, n, total_units + 1), dtype=np.float64),
+        bw_acc0=np.zeros((M, n), dtype=np.float64),
+        ipc_acc0=np.zeros((M, n), dtype=np.float64),
+        off_ipc0=np.zeros((M, n), dtype=np.float64),
+        min_ways=_per_row(min_ways, (M,), np.int32),
+        speedup_threshold=_per_row(speedup_threshold, (M, 1), np.float64),
+        min_bandwidth_allocation=_per_row(
+            min_bandwidth_allocation, (M, 1), np.float64),
+        atd_decay=_per_row(atd_decay, (M, 1, 1), np.float64),
+        bandwidth_delay_decay=_per_row(
+            bandwidth_delay_decay, (M, 1), np.float64),
+    )
+    replicated = {
+        "kinds": kinds,
+        "durations": durations,
+        "reconf": reconf,
+        "total_bandwidth": np.float64(total_bandwidth),
+        "llc_extra_cycles": np.float64(llc_extra_cycles),
+    }
+
+    n_shards = 1 if shard is False else distributed.row_shard_count(M)
+    m_pad = -(-M // n_shards) * n_shards
+    if m_pad != M:
+        # Pad with copies of the last row; sliced off after the program.
+        sharded = {
+            k: np.concatenate(
+                [v, np.repeat(v[-1:], m_pad - M, axis=0)], axis=0)
+            for k, v in sharded.items()
+        }
+
+    has_sampling = bool(np.isin(kinds, (SAMPLE_OFF, SAMPLE_ON)).any())
+    fn = _compiled_timeline(
+        variant, bool(cache_dynamic), bool(bandwidth_dynamic),
+        bool(cache_partitioned), bool(bandwidth_partitioned),
+        has_sampling, int(total_units), int(iters), n_shards)
+    record_dispatch()
+    with memsys_jax.x64_context():
+        out = {k: np.asarray(v)[:M] for k, v in fn(sharded,
+                                                   replicated).items()}
+    return TimelineResult(
+        ipc_acc=out["ipc_acc"],
+        w_acc=w_acc,
+        cache_units=out["cache_units"].astype(np.int64),
+        bandwidth=out["bandwidth"],
+        prefetch_on=out["prefetch_on"],
+        active=out["active"],
+    )

@@ -1,0 +1,152 @@
+"""The fused Fig. 8 timeline (PR 3): parity, dispatch contract, sharding.
+
+Contracts under test (see ``src/repro/sim/timeline_jax.py``):
+
+* fused trajectories match the PR 2 segment-loop path — identical integer
+  and boolean controller decisions, float results to well within the 1e-5
+  model tolerance;
+* a full ``run_sweep`` is ONE device program per (manager, timeline) plus
+  a single baseline evaluation (dispatch counter), with zero host
+  allocator calls;
+* the ``CBPParams`` decay constants default to the paper's 0.5 and sweep
+  through ``param_grid``;
+* capacity invariants raise real exceptions (not ``assert``);
+* the mix axis shards across forced host devices with identical results.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BandwidthController,
+    CBPParams,
+    allocator_calls,
+    device_dispatches,
+    reset_device_dispatches,
+)
+from repro.sim import MANAGER_NAMES, WORKLOADS, random_mixes, run_sweep
+from repro.sim.runner import CMPConfig
+from repro.sim.sweep import (
+    CapacityInvariantError,
+    _check_bandwidth_capacity,
+    _check_units_capacity,
+)
+
+SEGMENT = CMPConfig(timeline_backend="segment")
+
+
+def test_fused_matches_segment_loop_all_managers():
+    """Whole-timeline fusion vs the per-segment host loop, every manager."""
+    mixes = [WORKLOADS["w1"], WORKLOADS["w2"]]
+    fused = run_sweep(mixes, total_ms=40.0)
+    seg = run_sweep(mixes, total_ms=40.0, config=SEGMENT)
+    for name in MANAGER_NAMES:
+        err = np.max(np.abs(fused.ipc[name] - seg.ipc[name])
+                     / (np.abs(seg.ipc[name]) + 1e-12))
+        assert err < 1e-9, (name, err)
+        fa, sa = fused.final_alloc[name], seg.final_alloc[name]
+        np.testing.assert_array_equal(fa.cache_units, sa.cache_units,
+                                      err_msg=name)
+        np.testing.assert_array_equal(fa.prefetch_on, sa.prefetch_on,
+                                      err_msg=name)
+        np.testing.assert_allclose(fa.bandwidth, sa.bandwidth,
+                                   rtol=1e-12, err_msg=name)
+
+
+def test_fused_sweep_is_one_program_per_manager_timeline():
+    """The PR 3 dispatch contract: len(managers) timeline programs plus
+    one baseline evaluation — nothing per segment, nothing per mix."""
+    mixes = random_mixes(3, 16, seed=9)
+    names = ["baseline", "only cache", "bw+pref", "CPpf", "CBP"]
+    before_alloc = allocator_calls()
+    reset_device_dispatches()
+    res = run_sweep(mixes, managers=names, total_ms=20.0)
+    assert device_dispatches() == len(names) + 1
+    assert allocator_calls() == before_alloc
+    for name in names:
+        assert np.isfinite(res.ipc[name]).all()
+
+
+def test_segment_loop_dispatches_per_segment():
+    """Sanity check that the counter measures what it claims: the segment
+    path pays many device calls per timeline."""
+    mixes = random_mixes(2, 16, seed=9)
+    reset_device_dispatches()
+    run_sweep(mixes, managers=["CBP"], total_ms=20.0, config=SEGMENT)
+    assert device_dispatches() > 10
+
+
+def test_decay_defaults_pinned_to_paper_halving():
+    p = CBPParams()
+    assert p.atd_decay == 0.5
+    assert p.bandwidth_delay_decay == 0.5
+    assert BandwidthController(64.0, 1.0).decay == 0.5
+
+
+def test_decay_constants_sweep_through_param_grid():
+    mixes = [WORKLOADS["w1"]]
+    grid = [CBPParams(),
+            CBPParams(atd_decay=0.9, bandwidth_delay_decay=0.2)]
+    res = run_sweep(mixes, managers=["CBP"], total_ms=30.0, param_grid=grid)
+    assert res.ipc["CBP"].shape == (2, 1, 16)
+    for pi, p in enumerate(grid):
+        ref = run_sweep(mixes, managers=["CBP"], total_ms=30.0, params=p)
+        np.testing.assert_array_equal(res.ipc["CBP"][pi], ref.ipc["CBP"])
+    # the decay constants are live knobs: sweeping them moves the result
+    assert not np.array_equal(res.ipc["CBP"][0], res.ipc["CBP"][1])
+
+
+def test_capacity_invariant_checks_raise_real_exceptions():
+    """Must trip under ``python -O`` too — never a bare assert."""
+    _check_units_capacity(np.full((2, 4), 64), 256, "t")
+    with pytest.raises(CapacityInvariantError):
+        _check_units_capacity(np.full((2, 4), 63), 256, "t")
+    _check_bandwidth_capacity(np.full((2, 4), 16.0), 64.0, "t")
+    with pytest.raises(CapacityInvariantError):
+        _check_bandwidth_capacity(np.full((2, 4), 15.0), 64.0, "t")
+    assert issubclass(CapacityInvariantError, RuntimeError)
+
+
+_SHARD_SCRIPT = """
+import json, sys
+import numpy as np
+import jax
+from repro.sim import WORKLOADS, run_sweep
+assert jax.device_count() == 8, jax.device_count()
+res = run_sweep([WORKLOADS["w1"], WORKLOADS["w2"]], managers=["CBP"],
+                total_ms=20.0)
+json.dump({"ipc": np.asarray(res.ipc["CBP"]).tolist(),
+           "units": np.asarray(
+               res.final_alloc["CBP"].cache_units).tolist()},
+          sys.stdout)
+"""
+
+
+def test_mix_axis_shards_across_forced_host_devices():
+    """The same sweep on 8 forced host devices (mix axis sharded via
+    repro.distributed.shard_map, padded 2 -> 8) matches the single-device
+    run to float64 round-off."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        flags += " --xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = flags.strip()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(repo, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHARD_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    sharded = json.loads(proc.stdout)
+
+    ref = run_sweep([WORKLOADS["w1"], WORKLOADS["w2"]], managers=["CBP"],
+                    total_ms=20.0)
+    np.testing.assert_allclose(
+        np.asarray(sharded["ipc"]), ref.ipc["CBP"], rtol=1e-12, atol=1e-12)
+    np.testing.assert_array_equal(
+        np.asarray(sharded["units"]), ref.final_alloc["CBP"].cache_units)
