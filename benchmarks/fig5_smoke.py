@@ -1,0 +1,177 @@
+"""Fig. 5 static-search smoke: the CI gate for the batched search path.
+
+Runs the potential-study search (``repro.sim.static_search``) over a
+fixed set of 4-app random workloads and asserts the contracts that make
+the search scale:
+
+* AT MOST two device programs per manager family — in practice exactly
+  one per family plus one shared baseline evaluation — checked with the
+  :func:`repro.core.device_dispatches` counter on the warm runs;
+* batched-vs-numpy parity: best weighted speedups match the
+  ``benchmarks.paper_figs._exhaustive_best`` host reference within 1e-5
+  relative on a spot-check subset (the full parity matrix lives in
+  ``tests/test_static_search.py``);
+* the potential-study invariant: the all-three family's best static
+  allocation dominates every subset family per workload (its grid is a
+  strict superset).
+
+The search runs three times; the jit-warm wall time (min over the two
+warm runs) is the trajectory metric, gated against the committed
+``results/bench/fig5_smoke.json`` record via ``FIG5_SMOKE_BUDGET_X``
+(default 3x, slack for machine variance).  ``--compare-host`` times the
+pre-PR 4 host loop (one ``_exhaustive_best`` call per (workload,
+family)) and records the speedup; CI skips it to stay inside its
+wall-time budget, and the refreshed record preserves the recorded
+comparison fields.
+
+    PYTHONPATH=src python -m benchmarks.fig5_smoke [--compare-host]
+
+With ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` the same
+smoke exercises the multi-device path: the workload axis shards over the
+N forced host devices via ``repro.distributed`` (the CI ``shard8`` job).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit
+from benchmarks.paper_figs import _exhaustive_best
+from repro.core import device_dispatches, reset_device_dispatches
+from repro.sim.static_search import FIG5_FAMILIES, search_static
+from repro.sim.workloads import random_workloads
+
+DEFAULT_WORKLOADS = 16
+
+#: Prior-record fields preserved across runs that skip the comparison.
+HOST_FIELDS = ("wall_s_host_loop", "host_loop_speedup_warm",
+               "host_loop_dispatch_equivalent")
+
+#: (family, workload index) spot checks against the numpy reference —
+#: the cheap families on two workloads plus the big all-three grid once.
+PARITY_CHECKS = (
+    ("only_pref", (0, 1)),
+    ("bw+pref", (0, 1)),
+    ("cache+bw", (0, 1)),
+    ("cache+bw+pref", (0,)),
+)
+
+
+def _prior_record() -> dict:
+    path = RESULTS / "fig5_smoke.json"
+    if not path.exists():
+        return {}
+    try:
+        return json.loads(path.read_text()).get("derived", {})
+    except (ValueError, OSError):
+        return {}
+
+
+def _host_loop(workloads) -> np.ndarray:
+    """The pre-PR 4 path: one numpy solve per (workload, family)."""
+    return np.array([
+        [_exhaustive_best(w, spec.manage_cache, spec.manage_bw,
+                          spec.manage_pf, spec.pf_all_on)
+         for w in workloads]
+        for spec in FIG5_FAMILIES.values()
+    ])
+
+
+def main(n_workloads: int = DEFAULT_WORKLOADS,
+         compare_host: bool = False) -> None:
+    prior = _prior_record()
+    wls = random_workloads(n_workloads, 4, seed=7)
+    families = list(FIG5_FAMILIES)
+
+    t0 = time.monotonic()
+    res = search_static(wls)
+    wall_cold = time.monotonic() - t0
+
+    # Hard failures, not asserts: this is a CI gate and must still trip
+    # under python -O / PYTHONOPTIMIZE.
+    for fam, idxs in PARITY_CHECKS:
+        spec = FIG5_FAMILIES[fam]
+        for wi in idxs:
+            ref = _exhaustive_best(
+                wls[wi], spec.manage_cache, spec.manage_bw,
+                spec.manage_pf, spec.pf_all_on)
+            got = float(res.best_ws(fam)[wi])
+            if abs(got - ref) > 1e-5 * abs(ref):
+                raise RuntimeError(
+                    f"batched-vs-numpy parity violation: {fam}[{wi}] "
+                    f"batched {got!r} vs reference {ref!r}")
+    all3 = res.best_ws("cache+bw+pref")
+    for fam in families:
+        if not (all3 >= res.best_ws(fam) - 1e-9).all():
+            raise RuntimeError(
+                f"all-three family does not dominate {fam}: its grid is "
+                "a superset, so this is a search bug")
+
+    # Warm runs: the compile-free trajectory metric (min of two), with
+    # the dispatch counter checking the <= 2-programs-per-family budget
+    # (in practice one per family + one shared baseline) on each run.
+    wall_warm = float("inf")
+    dispatch_budget = 2 * len(families)
+    for _ in range(2):
+        reset_device_dispatches()
+        t0 = time.monotonic()
+        search_static(wls)
+        wall_warm = min(wall_warm, time.monotonic() - t0)
+        dispatches = device_dispatches()
+        if dispatches > dispatch_budget:
+            raise RuntimeError(
+                f"static search launched {dispatches} device programs; "
+                f"the <=2-per-family budget allows {dispatch_budget}")
+
+    derived = {
+        "n_workloads": n_workloads,
+        "n_families": len(families),
+        "device_dispatches_warm": dispatches,
+        "dispatch_budget": dispatch_budget,
+        "wall_s_batched_warm": round(wall_warm, 3),
+        "wall_s_batched_cold": round(wall_cold, 3),
+        "geo_all3": round(res.geomean("cache+bw+pref"), 4),
+    }
+    if compare_host:
+        t0 = time.monotonic()
+        host = _host_loop(wls)
+        wall_host = time.monotonic() - t0
+        np.testing.assert_allclose(          # full-matrix parity while here
+            np.stack([res.best_ws(f) for f in families]), host, rtol=1e-5)
+        derived.update({
+            "wall_s_host_loop": round(wall_host, 3),
+            "host_loop_speedup_warm": round(
+                wall_host / max(wall_warm, 1e-9), 2),
+            "host_loop_dispatch_equivalent": n_workloads * len(families),
+        })
+    elif prior.get("n_workloads") == n_workloads:
+        # Carry the recorded comparison over only at the same shape —
+        # a host-loop wall time measured at another workload count would
+        # mislabel the refreshed record.
+        derived.update({k: prior[k] for k in HOST_FIELDS if k in prior})
+
+    # Trajectory gate BEFORE refreshing the record: a regressed run must
+    # not re-baseline the tracked JSON it just failed against.
+    budget_x = float(os.environ.get("FIG5_SMOKE_BUDGET_X", "3.0"))
+    prior_warm = prior.get("wall_s_batched_warm")
+    if (prior_warm and prior.get("n_workloads") == n_workloads
+            and wall_warm > budget_x * prior_warm):
+        raise RuntimeError(
+            f"fig5 search wall-time regression: warm {wall_warm:.2f}s vs "
+            f"recorded {prior_warm:.2f}s (budget {budget_x}x)")
+    # Non-default shapes go to a scratch record so local experiments never
+    # clobber the committed baseline.
+    emit("fig5_smoke" if n_workloads == DEFAULT_WORKLOADS
+         else "fig5_smoke_custom", wall_warm, derived)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workloads", type=int, default=DEFAULT_WORKLOADS)
+    ap.add_argument("--compare-host", action="store_true")
+    args = ap.parse_args()
+    main(args.workloads, args.compare_host)

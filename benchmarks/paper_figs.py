@@ -16,12 +16,14 @@ from repro.sim import (
     MANAGER_NAMES,
     WORKLOADS,
     baseline_ipc,
+    equal_share,
     evaluate,
     run_all_managers,
     run_sweep,
     stack,
     weighted_speedup,
 )
+from repro.sim.static_search import FIG5_TWO_RESOURCE, search_static
 from repro.sim.apps import EXPECTED_CLASS_COUNTS
 from repro.sim.characterization import (
     classify_all,
@@ -117,7 +119,15 @@ def fig4_leslie3d() -> None:
 def _exhaustive_best(apps: List[str], manage_cache: bool, manage_bw: bool,
                      manage_pf: bool, pf_all_on: bool = False) -> float:
     """Paper Fig. 5 protocol: best static allocation via exhaustive search
-    over cache {256k,512k,1M}, bw {2,4,6} GB/s, pf {off,on} per app."""
+    over cache {256k,512k,1M}, bw {2,4,6} GB/s, pf {off,on} per app.
+
+    This is the numpy GOLDEN REFERENCE for the batched device search
+    (:func:`repro.sim.static_search.search_static`, the path
+    :func:`fig5_potential` actually runs on): one vectorized host solve
+    per (workload, family).  ``tests/test_static_search.py`` pins the
+    batched search to it within 1e-5; change this first, then the
+    batched side.
+    """
     arr = stack(apps)
     n = len(apps)
     cache_opts = [(8, 16, 32) if manage_cache else (16,)] * n
@@ -136,7 +146,8 @@ def _exhaustive_best(apps: List[str], manage_cache: bool, manage_bw: bool,
     ss = evaluate(arr, cache_arr, bw_arr, pf_arr,
                   total_cache_units=16.0 * n, total_bandwidth_gbps=4.0 * n,
                   iters=40)
-    base = evaluate(arr, np.full(n, 16.0), np.full(n, 4.0),
+    units_eq, bw_eq = equal_share(n, 16 * n, 4.0 * n)
+    base = evaluate(arr, units_eq.astype(np.float64), bw_eq,
                     np.zeros(n), total_cache_units=16.0 * n,
                     total_bandwidth_gbps=4.0 * n, iters=40,
                     cache_partitioned=True, bandwidth_partitioned=True)
@@ -144,39 +155,35 @@ def _exhaustive_best(apps: List[str], manage_cache: bool, manage_bw: bool,
     return float(ws.max())
 
 
-def fig5_potential(n_workloads: int = 640) -> None:
-    """Potential study: exhaustive search over 4-app random workloads."""
+def fig5_potential(n_workloads: int = 640,
+                   backend: str = "jax") -> Dict[str, object]:
+    """Potential study: exhaustive search over 4-app random workloads.
+
+    Runs on the batched static-search subsystem
+    (:mod:`repro.sim.static_search`): every manager family is ONE device
+    program scanning its whole config grid over all workloads, plus one
+    shared baseline evaluation — instead of the old host loop of one
+    numpy solve per (workload, family).  ``backend="numpy"`` keeps the
+    vectorized host reference path.
+    """
     with timer() as t:
         wls = random_workloads(n_workloads, 4, seed=7)
-        managers = {
-            "equal_on": dict(manage_cache=False, manage_bw=False,
-                             manage_pf=False, pf_all_on=True),
-            "only_pref": dict(manage_cache=False, manage_bw=False,
-                              manage_pf=True),
-            "bw+pref": dict(manage_cache=False, manage_bw=True,
-                            manage_pf=True),
-            "cache+bw": dict(manage_cache=True, manage_bw=True,
-                             manage_pf=False),
-            "cache+pref": dict(manage_cache=True, manage_bw=False,
-                               manage_pf=True),
-            "cache+bw+pref": dict(manage_cache=True, manage_bw=True,
-                                  manage_pf=True),
-        }
-        geo = {}
-        frac10 = {}
-        for mname, kw in managers.items():
-            vals = np.array([_exhaustive_best(w, **kw) for w in wls])
-            geo[mname] = float(np.exp(np.mean(np.log(vals))))
-            frac10[mname] = float(np.mean(vals >= 1.10))
-        best_two = max(geo["cache+bw"], geo["cache+pref"], geo["bw+pref"])
-    emit("fig5_potential", t.seconds, {
+        res = search_static(wls, backend=backend)
+        geo = {name: res.geomean(name) for name in res.family_names}
+        frac10 = {name: res.frac_at_least(name, 1.10)
+                  for name in res.family_names}
+        best_two = max(geo[f] for f in FIG5_TWO_RESOURCE)
+    derived = {
         "n_workloads": n_workloads,
+        "backend": backend,
         **{f"geo_{k}": round(v, 3) for k, v in geo.items()},
         "all3_vs_best2": round(geo["cache+bw+pref"] / best_two - 1, 3),
         "paper_all3_vs_best2": 0.05,
         **{f"frac10_{k}": round(v, 2) for k, v in frac10.items()},
         "paper_frac10_all3": 0.90,
-    })
+    }
+    emit("fig5_potential", t.seconds, derived)
+    return derived
 
 
 def fig9_fig10_main(total_ms: float = 100.0) -> Dict[str, Dict[str, float]]:

@@ -17,6 +17,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        fig5_smoke,
         kernel_bench,
         paper_figs,
         roofline_report,
@@ -28,8 +29,11 @@ def main() -> None:
         "fig2": paper_figs.fig2_characterization,
         "fig3": paper_figs.fig3_prefetch_alloc,
         "fig4": paper_figs.fig4_leslie3d,
+        # fig5 runs on the batched static-search subsystem (one device
+        # program per manager family — repro.sim.static_search).
         "fig5": (lambda: paper_figs.fig5_potential(
             64 if args.quick else 640)),
+        "fig5_smoke": fig5_smoke.main,
         "fig9_10": paper_figs.fig9_fig10_main,
         "fig11": paper_figs.fig11_case_study,
         "fig12": paper_figs.fig12_sensitivity,

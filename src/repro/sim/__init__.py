@@ -23,24 +23,41 @@ from repro.sim.managers import (
     run_manager,
 )
 from repro.sim.memsys import SteadyState, evaluate, mpki_curve, utility_curves
-from repro.sim.runner import CMPConfig, CMPPlant, antt, baseline_ipc, weighted_speedup
+from repro.sim.runner import (
+    CMPConfig,
+    CMPPlant,
+    antt,
+    baseline_ipc,
+    equal_share,
+    weighted_speedup,
+)
 from repro.sim.workloads import WORKLOADS, random_mixes, random_workloads
 
-# The sweep substrate pulls in jax; load it lazily (PEP 562) so the scalar
-# numpy path stays importable without paying JAX startup cost.
+# The sweep and static-search substrates pull in jax; load them lazily
+# (PEP 562) so the scalar numpy path stays importable without paying JAX
+# startup cost.
 _SWEEP_EXPORTS = (
     "BatchedCMPPlant", "BatchedCoordinator", "SweepResult",
     "baseline_ipc_batched", "run_sweep",
 )
+_STATIC_SEARCH_EXPORTS = (
+    "FIG5_FAMILIES", "FIG5_TWO_RESOURCE", "FamilySpec", "StaticGrid",
+    "StaticOptions", "StaticSearchResult", "enumerate_grid", "family_grid",
+    "search_static",
+)
 
 
 def __getattr__(name):
-    if name in ("memsys_jax", "timeline_jax"):
+    if name in ("memsys_jax", "timeline_jax", "static_search"):
         import importlib
         return importlib.import_module(f"repro.sim.{name}")
     if name in _SWEEP_EXPORTS:
         import importlib
         return getattr(importlib.import_module("repro.sim.sweep"), name)
+    if name in _STATIC_SEARCH_EXPORTS:
+        import importlib
+        return getattr(importlib.import_module("repro.sim.static_search"),
+                       name)
     raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")
 
 __all__ = [
@@ -50,8 +67,10 @@ __all__ = [
     "MANAGER_NAMES", "TABLE3_MODES", "ManagerResult", "run_all_managers",
     "run_manager",
     "SteadyState", "evaluate", "mpki_curve", "utility_curves",
-    "CMPConfig", "CMPPlant", "antt", "baseline_ipc", "weighted_speedup",
+    "CMPConfig", "CMPPlant", "antt", "baseline_ipc", "equal_share",
+    "weighted_speedup",
     "BatchedCMPPlant", "BatchedCoordinator", "SweepResult",
     "baseline_ipc_batched", "run_sweep",
+    *_STATIC_SEARCH_EXPORTS,
     "WORKLOADS", "random_mixes", "random_workloads",
 ]

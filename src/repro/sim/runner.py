@@ -118,14 +118,32 @@ class CMPPlant:
         )
 
 
+def equal_share(n: int, total_units, total_bandwidth):
+    """Equal-share per-app allocation — the ONE baseline construction.
+
+    Every baseline in the repo splits capacity this way: ``total_units
+    // n`` cache units each (integer floor) and exactly
+    ``total_bandwidth / n`` GB/s each.  Shared by the scalar baseline
+    (:func:`baseline_ipc`), the batched sweep baseline
+    (:func:`repro.sim.sweep.baseline_ipc_batched`) and the Fig. 5 static
+    search (:mod:`repro.sim.static_search`,
+    ``benchmarks.paper_figs._exhaustive_best``) so the protocols cannot
+    drift apart; only the partitioning mode differs per protocol.
+    """
+    units = np.full(n, int(total_units) // n, dtype=np.int64)
+    bw = np.full(n, float(total_bandwidth) / n, dtype=np.float64)
+    return units, bw
+
+
 def baseline_ipc(workload: Sequence[str],
                  config: Optional[CMPConfig] = None) -> np.ndarray:
     """Paper baseline: unpartitioned cache + bandwidth, prefetch disabled."""
     plant = CMPPlant(workload, config)
     n = plant.n_clients
+    units, bw = equal_share(n, plant.total_cache_units, plant.total_bandwidth)
     alloc = Allocation(
-        cache_units=np.full(n, plant.total_cache_units // n),
-        bandwidth=np.full(n, plant.total_bandwidth / n),
+        cache_units=units,
+        bandwidth=bw,
         prefetch_on=np.zeros(n, dtype=bool),
         cache_mode=Mode.UNPARTITIONED,
         bandwidth_mode=Mode.UNPARTITIONED,

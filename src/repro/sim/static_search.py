@@ -1,0 +1,541 @@
+"""Batched static-allocation search (the Fig. 5 potential-study substrate).
+
+The paper's potential study (§2.3 / Fig. 5) exhaustively searches static
+(cache, bandwidth, prefetch) allocations per workload and per manager
+*family* (the subset of resources a manager may move) to show that
+coordinating all three resources beats any two-resource subset.  The old
+path looped ``benchmarks.paper_figs._exhaustive_best`` on the host — one
+vectorized numpy solve per (workload, family), ~3840 host dispatches for
+the 640-workload study.  This module turns each family into ONE jitted
+device program:
+
+* the constrained config grid is enumerated on the host
+  (:func:`enumerate_grid` — per-resource option products, sum-feasibility
+  filtered, in ``itertools.product`` order) and padded to a chunk multiple
+  with a validity mask;
+* the program scans config chunks on device, evaluating the batched
+  interval model (:mod:`repro.sim.memsys_jax`) for every (workload,
+  config) pair in the chunk and folding a running top-k of weighted
+  speedups — memory stays bounded at ``n_workloads x chunk`` regardless
+  of grid size;
+* the workload axis shards across devices via
+  :func:`repro.distributed.shard_rows`, exactly like the fused Fig. 8
+  timelines.
+
+A full :func:`search_static` is therefore ``len(families)`` device
+programs plus one shared baseline evaluation (counter:
+:func:`repro.core.device_dispatches`).
+
+Parity contract: ``backend="numpy"`` runs the same search on the numpy
+golden reference (:func:`repro.sim.memsys.evaluate`, one host solve per
+workload — the ``_exhaustive_best`` protocol); the JAX backend must match
+it within 1e-5 relative weighted speedup and return the SAME argmax
+config under the documented tie-break (enforced by
+``tests/test_static_search.py``).
+
+Tie-breaks: among configs with equal weighted speedup the LOWEST
+enumeration index wins, where enumeration order is ``itertools.product``
+nesting — cache combinations outermost, then bandwidth, then prefetch,
+each with the last application varying fastest (the `_exhaustive_best`
+combo order).  Top-k results are sorted descending by weighted speedup
+with distinct config indices; slots beyond the number of feasible
+configs hold ``-inf`` / index ``-1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.sim import memsys
+from repro.sim.apps import MODEL_FIELDS, AppArrays, stack_mixes
+from repro.sim.runner import equal_share
+
+#: Fixed-point iterations of the Fig. 5 protocol (fewer than the plant's
+#: 60: static allocations converge fast and the reference always used 40).
+FIG5_ITERS = 40
+
+#: Target elements (workloads x configs x apps) per on-device scan step;
+#: bounds peak memory at a few hundred MB of f64 temporaries.
+CHUNK_ELEMENTS = 1 << 21
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilySpec:
+    """Which resources a Fig. 5 family may allocate statically.
+
+    Unmanaged resources pin to the equal-share fixed point
+    (``StaticOptions.cache_fixed`` / ``bw_fixed``); an unmanaged
+    prefetcher is off unless ``pf_all_on`` forces it on for everyone.
+    """
+
+    manage_cache: bool = False
+    manage_bw: bool = False
+    manage_pf: bool = False
+    pf_all_on: bool = False
+
+
+#: The Fig. 5 manager families (paper §2.3), insertion order = plot order.
+FIG5_FAMILIES: Dict[str, FamilySpec] = {
+    "equal_on": FamilySpec(pf_all_on=True),
+    "only_pref": FamilySpec(manage_pf=True),
+    "bw+pref": FamilySpec(manage_bw=True, manage_pf=True),
+    "cache+bw": FamilySpec(manage_cache=True, manage_bw=True),
+    "cache+pref": FamilySpec(manage_cache=True, manage_pf=True),
+    "cache+bw+pref": FamilySpec(manage_cache=True, manage_bw=True,
+                                manage_pf=True),
+}
+
+#: The two-resource subsets the all-three family is compared against.
+FIG5_TWO_RESOURCE = ("bw+pref", "cache+bw", "cache+pref")
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticOptions:
+    """The static design-space option values (paper §2.3 defaults).
+
+    Budgets are per application: a workload of ``n`` apps searches under
+    ``sum(cache) <= cache_budget_per_app * n`` (ditto bandwidth), and the
+    budgets double as the model's total capacities — exactly the
+    ``_exhaustive_best`` protocol.  Replace the option tuples for finer
+    or larger grids; they need not contain the fixed points.
+    """
+
+    cache_options: Tuple[float, ...] = (8.0, 16.0, 32.0)
+    cache_fixed: float = 16.0
+    bw_options: Tuple[float, ...] = (2.0, 4.0, 6.0)
+    bw_fixed: float = 4.0
+    cache_budget_per_app: float = 16.0
+    bw_budget_per_app: float = 4.0
+
+    def per_app(self, spec: FamilySpec, n: int):
+        """Per-application option tuples for one family."""
+        cache = (tuple(float(c) for c in self.cache_options)
+                 if spec.manage_cache else (float(self.cache_fixed),))
+        bw = (tuple(float(b) for b in self.bw_options)
+              if spec.manage_bw else (float(self.bw_fixed),))
+        pf = ((0.0, 1.0) if spec.manage_pf
+              else ((1.0,) if spec.pf_all_on else (0.0,)))
+        return [cache] * n, [bw] * n, [pf] * n
+
+
+@dataclasses.dataclass
+class StaticGrid:
+    """Feasible static configurations, one row per (cache, bw, pf) combo.
+
+    ``cache`` / ``bandwidth`` / ``prefetch`` are ``(C, n)``; ``valid`` is
+    ``(C,)`` and is all-True straight out of :func:`enumerate_grid` —
+    :meth:`pad_to` appends masked copies of the last row so the device
+    scan sees a rectangular chunk grid, and the search reductions ignore
+    every ``valid == False`` row.
+    """
+
+    cache: np.ndarray
+    bandwidth: np.ndarray
+    prefetch: np.ndarray
+    valid: np.ndarray
+    total_cache_units: float
+    total_bandwidth_gbps: float
+
+    @property
+    def n_configs(self) -> int:
+        """Feasible (unmasked) configurations."""
+        return int(self.valid.sum())
+
+    @property
+    def n_apps(self) -> int:
+        return int(self.cache.shape[-1])
+
+    def pad_to(self, multiple: int) -> "StaticGrid":
+        """Pad rows to a multiple of ``multiple`` with ``valid=False``."""
+        c = len(self.valid)
+        pad = -(-c // multiple) * multiple - c
+        if pad == 0:
+            return self
+
+        def ext(a: np.ndarray) -> np.ndarray:
+            return np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+
+        return dataclasses.replace(
+            self, cache=ext(self.cache), bandwidth=ext(self.bandwidth),
+            prefetch=ext(self.prefetch),
+            valid=np.concatenate([self.valid, np.zeros(pad, dtype=bool)]))
+
+    def config(self, index) -> Dict[str, np.ndarray]:
+        """Allocation arrays for (an array of) config indices."""
+        idx = np.asarray(index)
+        return {
+            "cache_units": self.cache[idx],
+            "bandwidth_gbps": self.bandwidth[idx],
+            "prefetch_on": self.prefetch[idx],
+        }
+
+
+def _options_product(opts: Sequence[Tuple[float, ...]]) -> np.ndarray:
+    """All per-app combinations, ``itertools.product`` order, ``(K, n)``."""
+    grids = np.meshgrid(*[np.asarray(o, np.float64) for o in opts],
+                        indexing="ij")
+    return np.stack([g.reshape(-1) for g in grids], axis=-1)
+
+
+def enumerate_grid(
+    cache_options: Sequence[Tuple[float, ...]],
+    bw_options: Sequence[Tuple[float, ...]],
+    pf_options: Sequence[Tuple[float, ...]],
+    *,
+    cache_budget: float,
+    bw_budget: float,
+) -> StaticGrid:
+    """Enumerate the feasible static grid for one workload size.
+
+    Each ``*_options`` entry is the option tuple of one application.
+    Per-resource combinations whose sum exceeds the budget are dropped
+    (sum-feasibility), then the three resources cross — preserving the
+    reference enumeration order (cache outermost, then bandwidth, then
+    prefetch, last application fastest).
+    """
+    n = len(cache_options)
+    if not (len(bw_options) == n and len(pf_options) == n):
+        raise ValueError(
+            f"per-app option lists disagree on n: {len(cache_options)}, "
+            f"{len(bw_options)}, {len(pf_options)}")
+    caches = _options_product(cache_options)
+    caches = caches[caches.sum(axis=-1) <= cache_budget + 1e-9]
+    bws = _options_product(bw_options)
+    bws = bws[bws.sum(axis=-1) <= bw_budget + 1e-9]
+    pfs = _options_product(pf_options)
+    if len(caches) == 0 or len(bws) == 0:
+        raise ValueError(
+            "no feasible configuration: every cache or bandwidth "
+            "combination exceeds its budget")
+    cc, cb, cp = len(caches), len(bws), len(pfs)
+    return StaticGrid(
+        cache=np.repeat(caches, cb * cp, axis=0),
+        bandwidth=np.tile(np.repeat(bws, cp, axis=0), (cc, 1)),
+        prefetch=np.tile(pfs, (cc * cb, 1)),
+        valid=np.ones(cc * cb * cp, dtype=bool),
+        total_cache_units=float(cache_budget),
+        total_bandwidth_gbps=float(bw_budget),
+    )
+
+
+def family_grid(spec: FamilySpec, n: int,
+                options: Optional[StaticOptions] = None) -> StaticGrid:
+    """The constrained config grid of one family for ``n``-app workloads."""
+    options = options or StaticOptions()
+    cache_opts, bw_opts, pf_opts = options.per_app(spec, n)
+    return enumerate_grid(
+        cache_opts, bw_opts, pf_opts,
+        cache_budget=options.cache_budget_per_app * n,
+        bw_budget=options.bw_budget_per_app * n)
+
+
+@dataclasses.dataclass
+class StaticSearchResult:
+    """Per-(family, workload) best static allocations.
+
+    ``topk_ws`` / ``topk_index`` are ``(W, k)`` — sorted descending by
+    weighted speedup, distinct config indices into ``grids[family]``,
+    with ``-inf`` / ``-1`` filling slots beyond the feasible count.
+    """
+
+    family_names: List[str]
+    workloads: List[List[str]]
+    grids: Dict[str, StaticGrid]
+    topk_ws: Dict[str, np.ndarray]
+    topk_index: Dict[str, np.ndarray]
+    baseline_ipc: np.ndarray            # (W, n)
+    backend: str
+    k: int
+
+    @property
+    def n_workloads(self) -> int:
+        return int(self.baseline_ipc.shape[0])
+
+    def best_ws(self, family: str) -> np.ndarray:
+        """Best weighted speedup per workload, shape ``(W,)``."""
+        return self.topk_ws[family][:, 0]
+
+    def best_index(self, family: str) -> np.ndarray:
+        return self.topk_index[family][:, 0]
+
+    def best_config(self, family: str) -> Dict[str, np.ndarray]:
+        """Winning allocation arrays per workload, each ``(W, n)``."""
+        return self.grids[family].config(self.best_index(family))
+
+    def geomean(self, family: str) -> float:
+        """Geometric-mean best weighted speedup over workloads."""
+        return float(np.exp(np.mean(np.log(self.best_ws(family)))))
+
+    def frac_at_least(self, family: str, threshold: float = 1.10) -> float:
+        """Fraction of workloads at or above ``threshold`` (Fig. 5b)."""
+        return float(np.mean(self.best_ws(family) >= threshold))
+
+    def summary(self) -> Dict[str, float]:
+        return {name: round(self.geomean(name), 4)
+                for name in self.family_names}
+
+
+def _resolve_families(
+    families: Optional[Mapping[str, Union[FamilySpec, Mapping[str, bool]]]],
+) -> Dict[str, FamilySpec]:
+    if families is None:
+        return dict(FIG5_FAMILIES)
+    out: Dict[str, FamilySpec] = {}
+    for name, spec in families.items():
+        out[name] = spec if isinstance(spec, FamilySpec) else FamilySpec(**spec)
+    if not out:
+        raise ValueError("families must be non-empty")
+    return out
+
+
+def _row_apps(stacked: AppArrays, wi: int) -> AppArrays:
+    names = stacked.names[wi] if stacked.names else []
+    return AppArrays(
+        names=list(names),
+        **{f: np.asarray(getattr(stacked, f))[wi] for f in MODEL_FIELDS})
+
+
+# --------------------------------------------------------------------- #
+# numpy golden-reference backend
+# --------------------------------------------------------------------- #
+
+def _search_numpy_family(
+    apps_rows: List[AppArrays],
+    grid: StaticGrid,
+    baseline_ipc: np.ndarray,
+    k: int,
+    iters: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One host solve per workload over the whole (unpadded) grid."""
+    w = len(apps_rows)
+    top_ws = np.full((w, k), -np.inf)
+    top_idx = np.full((w, k), -1, dtype=np.int64)
+    for wi, arr in enumerate(apps_rows):
+        ss = memsys.evaluate(
+            arr, grid.cache, grid.bandwidth, grid.prefetch,
+            total_cache_units=grid.total_cache_units,
+            total_bandwidth_gbps=grid.total_bandwidth_gbps,
+            iters=iters)
+        ws = np.mean(ss.ipc / baseline_ipc[wi], axis=-1)
+        ws = np.where(grid.valid, ws, -np.inf)
+        # Stable descending sort: equal speedups keep enumeration order,
+        # i.e. the lowest config index wins (the documented tie-break).
+        order = np.argsort(-ws, kind="stable")[:k]
+        top_ws[wi, : len(order)] = ws[order]
+        top_idx[wi, : len(order)] = order
+    return top_ws, top_idx
+
+
+# --------------------------------------------------------------------- #
+# JAX device backend
+# --------------------------------------------------------------------- #
+
+@functools.lru_cache(maxsize=None)
+def _compiled_search(k: int, iters: int, n_shards: int):
+    """Build the jitted (optionally shard_mapped) family-search program.
+
+    Cached per static configuration; jit retraces on new array shapes
+    (different W, n, chunking) as usual.  The program scans config
+    chunks, evaluating the interval model for the full (workload, chunk)
+    block and folding a running top-k.  Both ``lax.top_k`` calls break
+    value ties toward earlier positions, and the running entries (earlier
+    chunks = lower config indices) are concatenated first, so the global
+    tie-break is "lowest enumeration index" — matching the numpy
+    reference's stable argsort.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import distributed
+    from repro.sim import memsys_jax
+
+    def worker(sharded, replicated):
+        p = {f: sharded["p_" + f][:, None, :]
+             for f in memsys_jax.PARAM_FIELDS}          # (W, 1, n)
+        base = sharded["baseline_ipc"]                  # (W, n)
+        total_units = replicated["total_cache_units"]
+        total_bw = replicated["total_bandwidth"]
+        llc_extra = replicated["llc_extra_cycles"]
+
+        def step(carry, xs):
+            top_ws, top_idx = carry
+            c_cache, c_bw, c_pf, c_valid, c_idx = xs
+            out = memsys_jax._evaluate_jit(
+                p, c_cache, c_bw, c_pf, total_units, total_bw, llc_extra,
+                cache_partitioned=True, bandwidth_partitioned=True,
+                iters=iters)
+            ws = jnp.mean(out[0] / base[:, None, :], axis=-1)  # (W, chunk)
+            ws = jnp.where(c_valid[None, :], ws, -jnp.inf)
+            cand_ws, cand_loc = jax.lax.top_k(ws, k)
+            cand_idx = c_idx[cand_loc]
+            merged_ws = jnp.concatenate([top_ws, cand_ws], axis=-1)
+            merged_idx = jnp.concatenate([top_idx, cand_idx], axis=-1)
+            top_ws, sel = jax.lax.top_k(merged_ws, k)
+            top_idx = jnp.take_along_axis(merged_idx, sel, axis=-1)
+            return (top_ws, top_idx), None
+
+        w = base.shape[0]
+        init = (jnp.full((w, k), -jnp.inf, base.dtype),
+                jnp.full((w, k), -1, jnp.int32))
+        (top_ws, top_idx), _ = jax.lax.scan(
+            step, init,
+            (replicated["cache"], replicated["bandwidth"],
+             replicated["prefetch"], replicated["valid"],
+             replicated["index"]))
+        return {"topk_ws": top_ws, "topk_index": top_idx}
+
+    if n_shards > 1:
+        worker = distributed.shard_rows(worker, n_shards)
+    return jax.jit(worker)
+
+
+def _search_jax_family(
+    sharded: Dict[str, np.ndarray],
+    grid: StaticGrid,
+    w: int,
+    k: int,
+    iters: int,
+    n_shards: int,
+    chunk_elements: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One device program: chunked grid scan + top-k for one family."""
+    from repro.core.dispatch import record_dispatch
+    from repro.sim import memsys_jax
+
+    n = grid.n_apps
+    w_pad = sharded["baseline_ipc"].shape[0]
+    chunk = max(k, min(len(grid.valid),
+                       max(1, chunk_elements // max(1, w_pad * n))))
+    padded = grid.pad_to(chunk)
+    s = len(padded.valid) // chunk
+    replicated = {
+        "cache": padded.cache.reshape(s, chunk, n),
+        "bandwidth": padded.bandwidth.reshape(s, chunk, n),
+        "prefetch": padded.prefetch.reshape(s, chunk, n),
+        "valid": padded.valid.reshape(s, chunk),
+        "index": np.arange(s * chunk, dtype=np.int32).reshape(s, chunk),
+        "total_cache_units": np.float64(grid.total_cache_units),
+        "total_bandwidth": np.float64(grid.total_bandwidth_gbps),
+        "llc_extra_cycles": np.float64(0.0),
+    }
+    fn = _compiled_search(k, iters, n_shards)
+    record_dispatch()
+    with memsys_jax.x64_context():
+        out = fn(sharded, replicated)
+        top_ws = np.asarray(out["topk_ws"])[:w]
+        top_idx = np.asarray(out["topk_index"])[:w].astype(np.int64)
+    return top_ws, top_idx
+
+
+# --------------------------------------------------------------------- #
+# entry point
+# --------------------------------------------------------------------- #
+
+def search_static(
+    workloads: Union[Sequence[Sequence[str]], AppArrays],
+    families: Optional[Mapping[str, Union[FamilySpec, Mapping]]] = None,
+    *,
+    k: int = 1,
+    backend: str = "jax",
+    options: Optional[StaticOptions] = None,
+    iters: int = FIG5_ITERS,
+    shard: Optional[bool] = None,
+    chunk_elements: int = CHUNK_ELEMENTS,
+) -> StaticSearchResult:
+    """Best static (cache, bandwidth, prefetch) allocation per workload.
+
+    Args:
+      workloads: equal-size workloads — lists of app names (any n, not
+        just the paper's 4) or an already-stacked ``(W, n)`` AppArrays.
+      families: name -> :class:`FamilySpec` (or kwargs dict); default the
+        paper's :data:`FIG5_FAMILIES`.
+      k: how many best configs to return per workload (sorted, distinct).
+      backend: ``"jax"`` (one device program per family, workload axis
+        sharded over devices) or ``"numpy"`` (the golden host reference,
+        one vectorized solve per workload) — mirroring
+        ``CacheController(backend=...)``.
+      options: the option grid / budgets (:class:`StaticOptions`).
+      iters: fixed-point iterations (Fig. 5 protocol default 40).
+      shard: ``None`` auto-shards over visible devices; ``False`` forces
+        single-device execution.  JAX backend only.
+      chunk_elements: on-device scan chunk budget (W x chunk x n).
+
+    Returns:
+      :class:`StaticSearchResult`; weighted speedups are against the
+      equal-share static partitioned baseline (prefetch off), the
+      ``_exhaustive_best`` normalization.
+    """
+    if backend not in ("numpy", "jax"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    fams = _resolve_families(families)
+    options = options or StaticOptions()
+
+    stacked = (workloads if isinstance(workloads, AppArrays)
+               else stack_mixes([list(w) for w in workloads]))
+    shape = np.asarray(stacked.cpi_base).shape
+    if len(shape) != 2 or shape[0] == 0:
+        raise ValueError(
+            f"workloads must stack to a non-empty (W, n); got {shape}")
+    w, n = shape
+    names = [list(m) for m in stacked.names] if stacked.names else []
+
+    grids = {name: family_grid(spec, n, options)
+             for name, spec in fams.items()}
+    total_units = options.cache_budget_per_app * n
+    total_bw = options.bw_budget_per_app * n
+    units_eq, bw_eq = equal_share(n, total_units, total_bw)
+    pf_off = np.zeros(n)
+
+    if backend == "numpy":
+        base = memsys.evaluate(
+            stacked, units_eq.astype(np.float64), bw_eq, pf_off,
+            total_cache_units=total_units, total_bandwidth_gbps=total_bw,
+            iters=iters).ipc
+        apps_rows = [_row_apps(stacked, wi) for wi in range(w)]
+        topk_ws, topk_idx = {}, {}
+        for name, grid in grids.items():
+            topk_ws[name], topk_idx[name] = _search_numpy_family(
+                apps_rows, grid, base, k, iters)
+    else:
+        from repro import distributed
+        from repro.sim import memsys_jax
+
+        # One shared baseline evaluation (family-independent): dispatch 1.
+        base = np.asarray(memsys_jax.evaluate(
+            stacked, units_eq.astype(np.float64), bw_eq, pf_off,
+            total_cache_units=total_units, total_bandwidth_gbps=total_bw,
+            iters=iters).ipc)
+
+        n_shards = 1 if shard is False else distributed.row_shard_count(w)
+        w_pad = -(-w // n_shards) * n_shards
+        params = memsys_jax.app_params(stacked)
+        sharded = {"p_" + f: np.ascontiguousarray(
+            np.broadcast_to(np.asarray(v, np.float64), (w, n)))
+            for f, v in params.items()}
+        sharded["baseline_ipc"] = np.asarray(base, dtype=np.float64)
+        if w_pad != w:
+            sharded = {
+                key: np.concatenate(
+                    [v, np.repeat(v[-1:], w_pad - w, axis=0)])
+                for key, v in sharded.items()
+            }
+        topk_ws, topk_idx = {}, {}
+        for name, grid in grids.items():
+            topk_ws[name], topk_idx[name] = _search_jax_family(
+                sharded, grid, w, k, iters, n_shards, chunk_elements)
+
+    return StaticSearchResult(
+        family_names=list(fams),
+        workloads=names,
+        grids=grids,
+        topk_ws=topk_ws,
+        topk_index=topk_idx,
+        baseline_ipc=np.asarray(base),
+        backend=backend,
+        k=k,
+    )

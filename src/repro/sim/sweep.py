@@ -72,6 +72,7 @@ from repro.sim.runner import (
     CMPConfig,
     _resolve_allocator_backend,
     _resolve_timeline_backend,
+    equal_share,
 )
 
 
@@ -166,9 +167,10 @@ class BatchedCMPPlant:
 def baseline_ipc_batched(plant: BatchedCMPPlant) -> np.ndarray:
     """Paper baseline per mix: unpartitioned everything, prefetch off."""
     m, n = plant.n_mixes, plant.n_clients
+    units, bw = equal_share(n, plant.total_cache_units, plant.total_bandwidth)
     alloc = Allocation(
-        cache_units=np.full((m, n), plant.total_cache_units // n),
-        bandwidth=np.full((m, n), plant.total_bandwidth / n),
+        cache_units=np.tile(units, (m, 1)),
+        bandwidth=np.tile(bw, (m, 1)),
         prefetch_on=np.zeros((m, n), dtype=bool),
         cache_mode=Mode.UNPARTITIONED,
         bandwidth_mode=Mode.UNPARTITIONED,

@@ -5,7 +5,9 @@
 #
 # --smoke additionally runs the fused-timeline sweep smoke
 # (benchmarks/sweep_smoke.py): asserts zero per-mix host allocator calls
-# and records sweep wall-time JSON under results/bench/.
+# and records sweep wall-time JSON under results/bench/ — plus the Fig. 5
+# static-search smoke (benchmarks/fig5_smoke.py): device-dispatch budget,
+# batched-vs-numpy parity spot checks and the min-of-2 warm wall record.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -24,4 +26,5 @@ python -m pytest -x -q ${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}
 
 if [ "$SMOKE" = "1" ]; then
   timeout 120 python -m benchmarks.sweep_smoke
+  timeout 180 python -m benchmarks.fig5_smoke
 fi
