@@ -45,15 +45,26 @@ def main() -> None:
         "kernel_cbp_matmul": kernel_bench.cbp_matmul_knob_sweep,
         "roofline": roofline_report.roofline_report,
     }
+    selected = {name: fn for name, fn in benches.items()
+                if not args.only or args.only in name}
+    if not selected:
+        # A typo'd --only used to print the CSV header and exit 0 — green
+        # CI with zero benches run.  Fail loudly with the valid names.
+        sys.exit(f"--only {args.only!r} matches no bench; known benches: "
+                 + ", ".join(benches))
+    failed = []
     print("name,us_per_call,derived")
-    for name, fn in benches.items():
-        if args.only and args.only not in name:
-            continue
+    for name, fn in selected.items():
         try:
             fn()
         except Exception as exc:  # noqa: BLE001
+            failed.append(name)
             print(f"{name},0,ERROR={type(exc).__name__}:{exc}",
                   flush=True)
+    if failed:
+        # The ERROR rows keep the CSV parseable, but a broken bench must
+        # not exit 0 — CI reads the exit code, not the rows.
+        sys.exit(f"{len(failed)} bench(es) errored: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

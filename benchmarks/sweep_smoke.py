@@ -1,13 +1,15 @@
-"""Device-resident sweep smoke: the CI gate for the fused timeline path.
+"""Device-resident sweep smoke: the CI gate for the stacked timeline path.
 
 Runs an all-manager x many-mix sweep and asserts the contracts that make
 sweeps scale:
 
 * ZERO per-mix host allocator calls (counter hook on the numpy
   ``lookahead_allocate``), and
-* ONE device program per (manager, timeline) plus a single baseline
-  evaluation — the PR 3 fused-timeline dispatch contract, checked with
-  the :func:`repro.core.device_dispatches` counter on the warm run.
+* AT MOST TWO device programs for the whole sweep — the stacked manager
+  set runs as ONE program (every Table-3 timeline batched along a
+  leading manager axis, ``repro.sim.timeline_jax.run_timelines``) plus
+  the shared baseline evaluation, checked with the
+  :func:`repro.core.device_dispatches` counter on the warm run.
 
 The sweep runs three times; the jit-warm wall time (min over the two
 warm runs — the cold run mostly measures XLA compilation, and the min
@@ -29,9 +31,10 @@ timeline or the allocator.
         [--compare-segment] [--compare-host]
 
 With ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` the same
-smoke exercises the multi-device path: the fused timelines shard their
-mix axis over the N forced host devices via ``repro.distributed``
-(that is the CI ``shard8`` job).
+smoke exercises the multi-device path: the stacked program shards its
+2-D (manager x mix) grid over the N forced host devices via
+``repro.distributed.shard_grid`` — 11 managers x 32 mixes on 8 forced
+devices factor into a (2, 4) mesh (that is the CI ``shard8`` job).
 """
 from __future__ import annotations
 
@@ -88,10 +91,11 @@ def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
         raise RuntimeError(f"CBP does not beat baseline: {summary}")
 
     # Warm-jit runs: the compile-free trajectory metric (min of two), with
-    # the dispatch counter checking the one-program-per-timeline contract
-    # (n_managers fused timelines + 1 baseline evaluation) on each run.
+    # the dispatch counter checking the stacked-sweep contract (ONE
+    # program for the whole manager set + 1 baseline evaluation) on each
+    # run.
     wall_warm = float("inf")
-    dispatch_budget = len(MANAGER_NAMES) + 1
+    dispatch_budget = 2
     for _ in range(2):
         reset_device_dispatches()
         t0 = time.monotonic()
@@ -100,8 +104,8 @@ def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
         dispatches = device_dispatches()
         if dispatches > dispatch_budget:
             raise RuntimeError(
-                f"fused sweep launched {dispatches} device programs; the "
-                f"one-per-(manager, timeline) contract allows "
+                f"stacked sweep launched {dispatches} device programs; "
+                f"the one-stacked-program-plus-baseline contract allows "
                 f"{dispatch_budget}")
 
     derived = {

@@ -32,9 +32,24 @@ def axis_types_kwargs(n_axes: int) -> dict:
     return {"axis_types": (axis_type.Auto,) * n_axes}
 
 
-def make_mesh(shape, axis_names) -> Mesh:
-    """``jax.make_mesh`` with Auto axis types on JAX versions that have them."""
-    return jax.make_mesh(shape, axis_names, **axis_types_kwargs(len(shape)))
+def make_mesh(shape, axis_names, devices=None) -> Mesh:
+    """``jax.make_mesh`` with Auto axis types on JAX versions that have them.
+
+    ``devices`` restricts the mesh to a device subset (the shard-count
+    clamps in :func:`row_shard_count` / :func:`grid_shard_counts` can pick
+    fewer shards than visible devices so tiny batches are not mostly
+    padding); ``None`` keeps jax.make_mesh's all-devices default.
+    """
+    kwargs = axis_types_kwargs(len(shape))
+    if devices is not None:
+        kwargs["devices"] = devices
+    try:
+        return jax.make_mesh(shape, axis_names, **kwargs)
+    except TypeError:  # pragma: no cover - pre-`devices=` JAX
+        if devices is None:
+            raise
+        import numpy as np
+        return Mesh(np.asarray(devices).reshape(shape), axis_names)
 
 
 def shard_map(worker, mesh, in_specs, out_specs):
@@ -55,31 +70,91 @@ def shard_map(worker, mesh, in_specs, out_specs):
 def row_shard_count(n_rows: int) -> int:
     """How many ways a leading batch axis of ``n_rows`` should shard.
 
-    Uses every visible device (``XLA_FLAGS=--xla_force_host_platform_
-    device_count=N`` forces N host devices for local testing); returns 1
-    when a single device is present or the batch is empty, which callers
-    treat as "skip shard_map entirely".
+    Uses the visible devices (``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` forces N host devices for local testing), clamped to
+    ``n_rows`` so a tiny batch never shards wider than it has rows (8
+    forced devices and 3 mixes used to build 8 shards whose padding
+    outnumbered the real rows).  Returns 1 when a single device is present
+    or the batch is empty, which callers treat as "skip shard_map
+    entirely".
     """
     if n_rows <= 0:
         return 1
-    return max(1, jax.device_count())
+    return max(1, min(n_rows, jax.device_count()))
 
 
 def shard_rows(worker, n_shards: int, axis_name: str = "mix"):
     """shard_map ``worker(sharded_tree, replicated_tree)`` over rows.
 
-    Builds a 1-D mesh of ``n_shards`` devices and maps the worker with the
-    first argument's leaves sharded on their leading axis (every leaf must
-    carry the batch axis, padded to a multiple of ``n_shards`` by the
-    caller) and the second argument replicated.  This is how the fused
-    Fig. 8 timeline (:mod:`repro.sim.timeline_jax`) spreads the mix axis
-    of hundreds-of-mixes sweeps across devices.
+    Builds a 1-D mesh of ``n_shards`` devices (the first ``n_shards`` of
+    the visible devices — :func:`row_shard_count` may clamp below the
+    device count) and maps the worker with the first argument's leaves
+    sharded on their leading axis (every leaf must carry the batch axis,
+    padded to a multiple of ``n_shards`` by the caller) and the second
+    argument replicated.  This is how the fused Fig. 8 timeline
+    (:mod:`repro.sim.timeline_jax`) spreads the mix axis of
+    hundreds-of-mixes sweeps across devices.
     """
-    mesh = make_mesh((n_shards,), (axis_name,))
+    devices = None
+    if n_shards < jax.device_count():
+        devices = jax.devices()[:n_shards]
+    mesh = make_mesh((n_shards,), (axis_name,), devices=devices)
     return shard_map(
         worker, mesh,
         in_specs=(PartitionSpec(axis_name), PartitionSpec()),
         out_specs=PartitionSpec(axis_name))
+
+
+def grid_shard_counts(n_groups: int, n_rows: int) -> Tuple[int, int]:
+    """Factor the visible devices into a (group, row) shard grid.
+
+    For the stacked Fig. 8 timelines the grid is (manager, mix): manager
+    groups shard on the first mesh axis, mixes on the second, so different
+    managers' timelines execute on different devices concurrently.  Each
+    axis is clamped to its extent (shards <= rows, like
+    :func:`row_shard_count`); among factorizations using the most devices
+    the most balanced one wins (maximal ``min(a, b)``, then maximal row
+    shards), which keeps per-axis padding small and exercises a genuine
+    2-D mesh whenever both axes have room.  ``(1, 1)`` means "skip
+    shard_map entirely".
+    """
+    d = jax.device_count()
+    if n_groups <= 0 or n_rows <= 0 or d <= 1:
+        return (1, 1)
+    best = (1, 1)
+    best_key = (1, 1, 1)
+    for a in range(1, min(n_groups, d) + 1):
+        b = min(n_rows, d // a)
+        key = (a * b, min(a, b), b)
+        if key > best_key:
+            best, best_key = (a, b), key
+    return best
+
+
+def shard_grid(worker, grid_shards: Tuple[int, int],
+               axis_names: Tuple[str, str] = ("mgr", "mix")):
+    """shard_map ``worker(grid_tree, group_tree, replicated_tree)`` over a
+    2-D (group x row) grid.
+
+    ``grid_tree`` leaves carry two leading batch axes ``(K, M, ...)`` and
+    shard on both mesh axes; ``group_tree`` leaves carry only the group
+    axis ``(K, ...)`` (per-manager segment tables and knob flags) and
+    shard on the first axis alone; ``replicated_tree`` is replicated.
+    Callers pad K and M to multiples of the shard counts.  With
+    ``grid_shards == (1, n)`` this degenerates to :func:`shard_rows` over
+    the row axis (the single-group / single-device fallback); callers skip
+    shard_map entirely at ``(1, 1)``.
+    """
+    a, b = grid_shards
+    devices = None
+    if a * b < jax.device_count():
+        devices = jax.devices()[: a * b]
+    mesh = make_mesh((a, b), axis_names, devices=devices)
+    g, r = axis_names
+    return shard_map(
+        worker, mesh,
+        in_specs=(PartitionSpec(g, r), PartitionSpec(g), PartitionSpec()),
+        out_specs=PartitionSpec(g, r))
 
 
 # Logical axis groups: "dp" spreads over every data-parallel mesh axis.

@@ -148,6 +148,90 @@ def _evaluate_jit(
     return jax.lax.fori_loop(0, iters, body, init)
 
 
+def _evaluate_rowflags(
+    params: Params,
+    cache_units: jnp.ndarray,
+    bw: jnp.ndarray,
+    pf: jnp.ndarray,
+    total_cache_units,
+    total_bandwidth_gbps,
+    llc_extra_cycles,
+    cache_partitioned: jnp.ndarray,
+    bandwidth_partitioned: jnp.ndarray,
+    iters: int,
+):
+    """:func:`_evaluate_jit` with *traced per-row* partitioning flags.
+
+    The stacked Fig. 8 timeline (:mod:`repro.sim.timeline_jax`) batches
+    managers with different Table-3 modes into one program, so
+    ``cache_partitioned`` / ``bandwidth_partitioned`` become boolean
+    arrays broadcasting against the batch axes instead of static trace
+    flags.  Both branches of each regime are computed and selected
+    elementwise; every op of the selected branch is identical to the
+    static-flag path, so per-row results are bit-identical to
+    :func:`_evaluate_jit` with that row's flags (pinned by
+    ``tests/test_timeline_fused.py``).  Meant to be called inside an
+    enclosing jitted program — it is not jitted itself.
+    """
+    shape = jnp.broadcast_shapes(
+        cache_units.shape, bw.shape, pf.shape, params["cpi_base"].shape)
+    n = shape[-1]
+    ipc0 = jnp.broadcast_to(1.0 / params["cpi_base"], shape)
+    zeros = jnp.zeros(shape, ipc0.dtype)
+    cache_part = jnp.broadcast_to(cache_partitioned, shape)
+    bw_part = jnp.broadcast_to(bandwidth_partitioned, shape)
+
+    def body(_, carry):
+        ipc, _q, _tr, mpki_eff, _ex, _oc = carry
+        # ---- cache occupancy -------------------------------------------- #
+        occ_p = jnp.broadcast_to(cache_units, shape).astype(ipc.dtype)
+        miss_rate = jnp.maximum(mpki_eff, 1e-3) * ipc
+        share = miss_rate / jnp.sum(miss_rate, axis=-1, keepdims=True)
+        occ = jnp.where(cache_part, occ_p, share * total_cache_units)
+        occ_eff = jnp.maximum(occ - params["pf_pollution"] * pf, 1.0)
+
+        # ---- prefetch-adjusted miss stream ------------------------------ #
+        m = mpki_curve(params, occ_eff)
+        covered = params["pf_cov"] * pf * m
+        exposed = m - covered * params["pf_hide"]
+        useless = covered * (1.0 / jnp.maximum(params["pf_acc"], 1e-3) - 1.0)
+        reqki = m * (1.0 + params["wb_frac"]) + useless
+        reqki_q = ((m - covered) + m * params["wb_frac"]
+                   + PF_QUEUE_WEIGHT * (covered + useless))
+
+        # ---- memory queuing --------------------------------------------- #
+        traffic = ipc * FREQ_GHZ * reqki * LINE_BYTES / 1000.0
+        traffic_q = ipc * FREQ_GHZ * reqki_q * LINE_BYTES / 1000.0
+        rho_p = traffic_q / jnp.maximum(bw, 1e-6)
+        cap_p = jnp.broadcast_to(bw, shape).astype(ipc.dtype)
+        tot = jnp.sum(traffic_q, axis=-1, keepdims=True)
+        rho_u = jnp.broadcast_to(tot / total_bandwidth_gbps, shape)
+        tot_full = jnp.sum(traffic, axis=-1, keepdims=True)
+        safe_tot = jnp.where(tot_full > 0, tot_full, 1.0)
+        frac = jnp.where(tot_full > 0, traffic / safe_tot, 1.0 / n)
+        rho = jnp.where(bw_part, rho_p, rho_u)
+        cap_gbps = jnp.where(bw_part, cap_p, frac * total_bandwidth_gbps)
+        rho_c = jnp.clip(rho, 0.0, RHO_MAX)
+        q_ns = Q_SCALE_NS * rho_c / (1.0 - rho_c)
+        q_ns = jnp.where(bw_part, q_ns,
+                         q_ns * (1.0 + IF_SKEW * (1.0 - frac)))
+
+        # ---- IPC --------------------------------------------------------- #
+        penalty_cyc = (DRAM_LAT_NS + q_ns) * FREQ_GHZ / params["mlp"]
+        cpi = (params["cpi_base"]
+               + params["apki"] / 1000.0 * llc_extra_cycles
+               + exposed / 1000.0 * penalty_cyc)
+        ipc_demand = 1.0 / cpi
+        ipc_cap = RHO_MAX * cap_gbps / jnp.maximum(
+            FREQ_GHZ * reqki * LINE_BYTES / 1000.0, 1e-9)
+        ipc_new = jnp.minimum(ipc_demand, ipc_cap)
+        ipc = DAMPING * ipc + (1.0 - DAMPING) * ipc_new
+        return (ipc, q_ns, traffic, m, exposed, occ)
+
+    init = (ipc0, zeros, zeros, zeros, zeros, zeros)
+    return jax.lax.fori_loop(0, iters, body, init)
+
+
 def evaluate(
     apps: Union[AppArrays, Params],
     cache_units,

@@ -28,14 +28,17 @@ class CMPConfig:
     #: backend (and resolves to "jax" on the batched sweep plant, keeping
     #: whole sweeps device-resident); "numpy"/"jax" force one side.
     allocator_backend: str = "auto"
-    #: How the batched sweep executes a manager's Fig. 8 timeline.  "fused"
-    #: compiles the whole timeline into one jitted device program per
-    #: (manager, timeline) — zero per-segment host transfers
-    #: (:mod:`repro.sim.timeline_jax`); "segment" keeps the PR 2 host loop
-    #: of one device call per segment (the parity/debug path).  "auto"
-    #: fuses unless the allocator is forced onto the host
+    #: How the batched sweep executes the managers' Fig. 8 timelines.
+    #: "stacked" batches the whole manager set into ONE jitted device
+    #: program (manager knob flags stack along a leading axis, the
+    #: (manager, mix) grid shards over devices —
+    #: :func:`repro.sim.timeline_jax.run_timelines`); "fused" keeps the
+    #: PR 3/4 path of one program per (manager, timeline) (the stacking
+    #: parity reference); "segment" keeps the PR 2 host loop of one
+    #: device call per segment (the parity/debug path).  "auto" stacks
+    #: unless the allocator is forced onto the host
     #: (``allocator_backend="numpy"``), which implies the segment loop —
-    #: the fused program's greedy is traced and cannot honour a host
+    #: the fused programs' greedy is traced and cannot honour a host
     #: allocator.
     timeline_backend: str = "auto"
 
@@ -49,11 +52,12 @@ def _resolve_allocator_backend(config: CMPConfig, default: str) -> str:
     return backend
 
 
-def _resolve_timeline_backend(config: CMPConfig, default: str = "fused") -> str:
+def _resolve_timeline_backend(config: CMPConfig,
+                              default: str = "stacked") -> str:
     backend = config.timeline_backend
     if backend == "auto":
         backend = default
-    if backend not in ("fused", "segment"):
+    if backend not in ("stacked", "fused", "segment"):
         raise ValueError(f"unknown timeline backend {backend!r}")
     return backend
 

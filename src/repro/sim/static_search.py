@@ -62,6 +62,16 @@ FIG5_ITERS = 40
 CHUNK_ELEMENTS = 1 << 21
 
 
+class InfeasibleGridError(ValueError):
+    """A static config grid has zero feasible configurations.
+
+    Raised with the violated constraint (and, from :func:`search_static`,
+    the family name) instead of silently searching an empty grid — an
+    empty grid's top-k would be all ``-inf`` scores and ``-1`` indices,
+    which downstream argmax/``config`` lookups consume as garbage.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class FamilySpec:
     """Which resources a Fig. 5 family may allocate statically.
@@ -164,8 +174,19 @@ class StaticGrid:
             valid=np.concatenate([self.valid, np.zeros(pad, dtype=bool)]))
 
     def config(self, index) -> Dict[str, np.ndarray]:
-        """Allocation arrays for (an array of) config indices."""
+        """Allocation arrays for (an array of) config indices.
+
+        Index ``-1`` marks an empty top-k slot (fewer feasible configs
+        than ``k``); refusing it here beats numpy's silent wrap-around to
+        the last grid row, which would hand the caller an allocation that
+        never won anything.
+        """
         idx = np.asarray(index)
+        if idx.size and (idx < 0).any():
+            raise IndexError(
+                "config index -1 marks an empty top-k slot (fewer "
+                "feasible configurations than k) — no allocation exists "
+                "for it")
         return {
             "cache_units": self.cache[idx],
             "bandwidth_gbps": self.bandwidth[idx],
@@ -207,9 +228,19 @@ def enumerate_grid(
     bws = bws[bws.sum(axis=-1) <= bw_budget + 1e-9]
     pfs = _options_product(pf_options)
     if len(caches) == 0 or len(bws) == 0:
-        raise ValueError(
-            "no feasible configuration: every cache or bandwidth "
-            "combination exceeds its budget")
+        violations = []
+        for label, opts, budget, combos in (
+                ("cache", cache_options, cache_budget, caches),
+                ("bandwidth", bw_options, bw_budget, bws)):
+            if len(combos) == 0:
+                min_sum = (sum(min(o) for o in opts)
+                           if all(len(o) for o in opts) else None)
+                violations.append(
+                    f"{label}: empty per-app option tuple" if min_sum is None
+                    else f"{label}: smallest per-app options sum to "
+                         f"{min_sum} > budget {budget}")
+        raise InfeasibleGridError(
+            "no feasible configuration — " + "; ".join(violations))
     cc, cb, cp = len(caches), len(bws), len(pfs)
     return StaticGrid(
         cache=np.repeat(caches, cb * cp, axis=0),
@@ -333,21 +364,62 @@ def _search_numpy_family(
 # JAX device backend
 # --------------------------------------------------------------------- #
 
-@functools.lru_cache(maxsize=None)
-def _compiled_search(k: int, iters: int, n_shards: int):
-    """Build the jitted (optionally shard_mapped) family-search program.
+def _family_scan(p, base, tables, k: int, iters: int):
+    """The chunked top-k fold of ONE family, shared by both program shapes.
 
-    Cached per static configuration; jit retraces on new array shapes
-    (different W, n, chunking) as usual.  The program scans config
-    chunks, evaluating the interval model for the full (workload, chunk)
-    block and folding a running top-k.  Both ``lax.top_k`` calls break
-    value ties toward earlier positions, and the running entries (earlier
-    chunks = lower config indices) are concatenated first, so the global
-    tie-break is "lowest enumeration index" — matching the numpy
-    reference's stable argsort.
+    ``tables`` holds the family's chunked config grid (``(s, chunk, n)``
+    plus validity/index rows); the scan evaluates the interval model for
+    the full (workload, chunk) block and folds a running top-k.  Both
+    ``lax.top_k`` calls break value ties toward earlier positions, and
+    the running entries (earlier chunks = lower config indices) are
+    concatenated first, so the global tie-break is "lowest enumeration
+    index" — matching the numpy reference's stable argsort.
     """
     import jax
     import jax.numpy as jnp
+
+    from repro.sim import memsys_jax
+
+    total_units = tables["total_cache_units"]
+    total_bw = tables["total_bandwidth"]
+    llc_extra = tables["llc_extra_cycles"]
+
+    def step(carry, xs):
+        top_ws, top_idx = carry
+        c_cache, c_bw, c_pf, c_valid, c_idx = xs
+        out = memsys_jax._evaluate_jit(
+            p, c_cache, c_bw, c_pf, total_units, total_bw, llc_extra,
+            cache_partitioned=True, bandwidth_partitioned=True,
+            iters=iters)
+        ws = jnp.mean(out[0] / base[:, None, :], axis=-1)  # (W, chunk)
+        ws = jnp.where(c_valid[None, :], ws, -jnp.inf)
+        cand_ws, cand_loc = jax.lax.top_k(ws, k)
+        cand_idx = c_idx[cand_loc]
+        merged_ws = jnp.concatenate([top_ws, cand_ws], axis=-1)
+        merged_idx = jnp.concatenate([top_idx, cand_idx], axis=-1)
+        top_ws, sel = jax.lax.top_k(merged_ws, k)
+        top_idx = jnp.take_along_axis(merged_idx, sel, axis=-1)
+        return (top_ws, top_idx), None
+
+    w = base.shape[0]
+    init = (jnp.full((w, k), -jnp.inf, base.dtype),
+            jnp.full((w, k), -1, jnp.int32))
+    (top_ws, top_idx), _ = jax.lax.scan(
+        step, init,
+        (tables["cache"], tables["bandwidth"], tables["prefetch"],
+         tables["valid"], tables["index"]))
+    return top_ws, top_idx
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_search(k: int, iters: int, n_shards: int):
+    """Build the jitted (optionally shard_mapped) ONE-family program.
+
+    Cached per static configuration; jit retraces on new array shapes
+    (different W, n, chunking) as usual.  This is the per-family
+    reference path the stacked program is parity-pinned against.
+    """
+    import jax
 
     from repro import distributed
     from repro.sim import memsys_jax
@@ -356,40 +428,73 @@ def _compiled_search(k: int, iters: int, n_shards: int):
         p = {f: sharded["p_" + f][:, None, :]
              for f in memsys_jax.PARAM_FIELDS}          # (W, 1, n)
         base = sharded["baseline_ipc"]                  # (W, n)
-        total_units = replicated["total_cache_units"]
-        total_bw = replicated["total_bandwidth"]
-        llc_extra = replicated["llc_extra_cycles"]
-
-        def step(carry, xs):
-            top_ws, top_idx = carry
-            c_cache, c_bw, c_pf, c_valid, c_idx = xs
-            out = memsys_jax._evaluate_jit(
-                p, c_cache, c_bw, c_pf, total_units, total_bw, llc_extra,
-                cache_partitioned=True, bandwidth_partitioned=True,
-                iters=iters)
-            ws = jnp.mean(out[0] / base[:, None, :], axis=-1)  # (W, chunk)
-            ws = jnp.where(c_valid[None, :], ws, -jnp.inf)
-            cand_ws, cand_loc = jax.lax.top_k(ws, k)
-            cand_idx = c_idx[cand_loc]
-            merged_ws = jnp.concatenate([top_ws, cand_ws], axis=-1)
-            merged_idx = jnp.concatenate([top_idx, cand_idx], axis=-1)
-            top_ws, sel = jax.lax.top_k(merged_ws, k)
-            top_idx = jnp.take_along_axis(merged_idx, sel, axis=-1)
-            return (top_ws, top_idx), None
-
-        w = base.shape[0]
-        init = (jnp.full((w, k), -jnp.inf, base.dtype),
-                jnp.full((w, k), -1, jnp.int32))
-        (top_ws, top_idx), _ = jax.lax.scan(
-            step, init,
-            (replicated["cache"], replicated["bandwidth"],
-             replicated["prefetch"], replicated["valid"],
-             replicated["index"]))
+        top_ws, top_idx = _family_scan(p, base, replicated, k, iters)
         return {"topk_ws": top_ws, "topk_index": top_idx}
 
     if n_shards > 1:
         worker = distributed.shard_rows(worker, n_shards)
     return jax.jit(worker)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_stacked_search(n_families: int, k: int, iters: int,
+                             n_shards: int):
+    """Build the jitted (optionally shard_mapped) ALL-families program.
+
+    Every family keeps its own chunk shape and runs its own
+    :func:`_family_scan` — the family axis concatenates the per-family
+    scans *sequentially inside one program*, so each family's
+    subcomputation is shape-identical to the per-family path (bit-parity
+    by construction) while a full :func:`search_static` drops from
+    ``len(families) + 1`` device dispatches to 2.  The workload axis
+    shards exactly as before.
+    """
+    import jax
+
+    from repro import distributed
+    from repro.sim import memsys_jax
+
+    def worker(sharded, replicated):
+        p = {f: sharded["p_" + f][:, None, :]
+             for f in memsys_jax.PARAM_FIELDS}          # (W, 1, n)
+        base = sharded["baseline_ipc"]                  # (W, n)
+        out = {}
+        for fi in range(n_families):
+            top_ws, top_idx = _family_scan(
+                p, base, replicated[f"family{fi}"], k, iters)
+            out[f"topk_ws{fi}"] = top_ws
+            out[f"topk_index{fi}"] = top_idx
+        return out
+
+    if n_shards > 1:
+        worker = distributed.shard_rows(worker, n_shards)
+    return jax.jit(worker)
+
+
+def _family_tables(grid: StaticGrid, w_pad: int, k: int,
+                   chunk_elements: int) -> Dict[str, np.ndarray]:
+    """Chunk one family's config grid into the scan tables it runs over.
+
+    The chunk shape depends only on this family's grid and the padded
+    workload count, NOT on which program (per-family or stacked) consumes
+    it — that is what keeps the two program shapes bit-identical per
+    family.
+    """
+    n = grid.n_apps
+    chunk = max(k, min(len(grid.valid),
+                       max(1, chunk_elements // max(1, w_pad * n))))
+    padded = grid.pad_to(chunk)
+    s = len(padded.valid) // chunk
+    return {
+        "cache": padded.cache.reshape(s, chunk, n),
+        "bandwidth": padded.bandwidth.reshape(s, chunk, n),
+        "prefetch": padded.prefetch.reshape(s, chunk, n),
+        "valid": padded.valid.reshape(s, chunk),
+        "index": np.arange(s * chunk, dtype=np.int32).reshape(s, chunk),
+        "total_cache_units": np.float64(grid.total_cache_units),
+        "total_bandwidth": np.float64(grid.total_bandwidth_gbps),
+        "llc_extra_cycles": np.float64(0.0),
+    }
 
 
 def _search_jax_family(
@@ -405,22 +510,8 @@ def _search_jax_family(
     from repro.core.dispatch import record_dispatch
     from repro.sim import memsys_jax
 
-    n = grid.n_apps
     w_pad = sharded["baseline_ipc"].shape[0]
-    chunk = max(k, min(len(grid.valid),
-                       max(1, chunk_elements // max(1, w_pad * n))))
-    padded = grid.pad_to(chunk)
-    s = len(padded.valid) // chunk
-    replicated = {
-        "cache": padded.cache.reshape(s, chunk, n),
-        "bandwidth": padded.bandwidth.reshape(s, chunk, n),
-        "prefetch": padded.prefetch.reshape(s, chunk, n),
-        "valid": padded.valid.reshape(s, chunk),
-        "index": np.arange(s * chunk, dtype=np.int32).reshape(s, chunk),
-        "total_cache_units": np.float64(grid.total_cache_units),
-        "total_bandwidth": np.float64(grid.total_bandwidth_gbps),
-        "llc_extra_cycles": np.float64(0.0),
-    }
+    replicated = _family_tables(grid, w_pad, k, chunk_elements)
     fn = _compiled_search(k, iters, n_shards)
     record_dispatch()
     with memsys_jax.x64_context():
@@ -428,6 +519,38 @@ def _search_jax_family(
         top_ws = np.asarray(out["topk_ws"])[:w]
         top_idx = np.asarray(out["topk_index"])[:w].astype(np.int64)
     return top_ws, top_idx
+
+
+def _search_jax_stacked(
+    sharded: Dict[str, np.ndarray],
+    grids: Dict[str, StaticGrid],
+    w: int,
+    k: int,
+    iters: int,
+    n_shards: int,
+    chunk_elements: int,
+) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+    """ONE device program scanning every family's grid back to back."""
+    from repro.core.dispatch import record_dispatch
+    from repro.sim import memsys_jax
+
+    w_pad = sharded["baseline_ipc"].shape[0]
+    names = list(grids)
+    replicated = {
+        f"family{fi}": _family_tables(grids[name], w_pad, k, chunk_elements)
+        for fi, name in enumerate(names)
+    }
+    fn = _compiled_stacked_search(len(names), k, iters, n_shards)
+    record_dispatch()
+    topk_ws: Dict[str, np.ndarray] = {}
+    topk_idx: Dict[str, np.ndarray] = {}
+    with memsys_jax.x64_context():
+        out = fn(sharded, replicated)
+        for fi, name in enumerate(names):
+            topk_ws[name] = np.asarray(out[f"topk_ws{fi}"])[:w]
+            topk_idx[name] = np.asarray(
+                out[f"topk_index{fi}"])[:w].astype(np.int64)
+    return topk_ws, topk_idx
 
 
 # --------------------------------------------------------------------- #
@@ -444,6 +567,7 @@ def search_static(
     iters: int = FIG5_ITERS,
     shard: Optional[bool] = None,
     chunk_elements: int = CHUNK_ELEMENTS,
+    stack_families: bool = True,
 ) -> StaticSearchResult:
     """Best static (cache, bandwidth, prefetch) allocation per workload.
 
@@ -453,15 +577,20 @@ def search_static(
       families: name -> :class:`FamilySpec` (or kwargs dict); default the
         paper's :data:`FIG5_FAMILIES`.
       k: how many best configs to return per workload (sorted, distinct).
-      backend: ``"jax"`` (one device program per family, workload axis
-        sharded over devices) or ``"numpy"`` (the golden host reference,
-        one vectorized solve per workload) — mirroring
+      backend: ``"jax"`` (every family in ONE device program, workload
+        axis sharded over devices) or ``"numpy"`` (the golden host
+        reference, one vectorized solve per workload) — mirroring
         ``CacheController(backend=...)``.
       options: the option grid / budgets (:class:`StaticOptions`).
       iters: fixed-point iterations (Fig. 5 protocol default 40).
       shard: ``None`` auto-shards over visible devices; ``False`` forces
         single-device execution.  JAX backend only.
       chunk_elements: on-device scan chunk budget (W x chunk x n).
+      stack_families: run all families back to back inside one jitted
+        program (2 dispatches total, the default); ``False`` keeps the
+        PR 4 one-program-per-family path (``len(families) + 1``
+        dispatches) — the stacking parity reference, bit-identical per
+        family.  JAX backend only.
 
     Returns:
       :class:`StaticSearchResult`; weighted speedups are against the
@@ -484,8 +613,16 @@ def search_static(
     w, n = shape
     names = [list(m) for m in stacked.names] if stacked.names else []
 
-    grids = {name: family_grid(spec, n, options)
-             for name, spec in fams.items()}
+    grids = {}
+    for name, spec in fams.items():
+        try:
+            grid = family_grid(spec, n, options)
+        except InfeasibleGridError as exc:
+            raise InfeasibleGridError(f"family {name!r}: {exc}") from None
+        if grid.n_configs == 0:
+            raise InfeasibleGridError(
+                f"family {name!r} has zero feasible configurations")
+        grids[name] = grid
     total_units = options.cache_budget_per_app * n
     total_bw = options.bw_budget_per_app * n
     units_eq, bw_eq = equal_share(n, total_units, total_bw)
@@ -524,10 +661,14 @@ def search_static(
                     [v, np.repeat(v[-1:], w_pad - w, axis=0)])
                 for key, v in sharded.items()
             }
-        topk_ws, topk_idx = {}, {}
-        for name, grid in grids.items():
-            topk_ws[name], topk_idx[name] = _search_jax_family(
-                sharded, grid, w, k, iters, n_shards, chunk_elements)
+        if stack_families:
+            topk_ws, topk_idx = _search_jax_stacked(
+                sharded, grids, w, k, iters, n_shards, chunk_elements)
+        else:
+            topk_ws, topk_idx = {}, {}
+            for name, grid in grids.items():
+                topk_ws[name], topk_idx[name] = _search_jax_family(
+                    sharded, grid, w, k, iters, n_shards, chunk_elements)
 
     return StaticSearchResult(
         family_names=list(fams),

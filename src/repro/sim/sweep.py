@@ -19,11 +19,18 @@ way (`CacheController.allocate_masked`).
 Since PR 3 the whole Fig. 8 timeline of each manager is ONE jitted device
 program (:mod:`repro.sim.timeline_jax`): the bandwidth controller and the
 prefetch throttle run inside the scan next to the batched Lookahead
-allocator, so a full sweep performs zero per-segment host transfers (one
-dispatch per (manager, timeline) — counter:
-:func:`repro.core.device_dispatches`) and large mix batches shard across
-devices via :mod:`repro.distributed`.  The PR 2 per-segment host loop is
-kept as the ``CMPConfig(timeline_backend="segment")`` parity/debug path.
+allocator, so a full sweep performs zero per-segment host transfers.
+Since PR 5 the *manager axis* is batched too: every Table-3 manager's
+segment table and knob flags stack along a leading axis inside one
+program (:func:`repro.sim.timeline_jax.run_timelines`), so a full sweep
+is AT MOST TWO device dispatches — the stacked manager set plus the
+shared baseline evaluation (counter:
+:func:`repro.core.device_dispatches`) — and the 2-D (manager, mix) grid
+shards across devices via :func:`repro.distributed.shard_grid`.  The
+PR 3/4 one-program-per-manager path survives as
+``CMPConfig(timeline_backend="fused")`` (the stacking parity reference —
+bit-identical per-(manager, mix) results), the PR 2 per-segment host
+loop as ``CMPConfig(timeline_backend="segment")`` (parity/debug).
 
 Structure:
 
@@ -61,6 +68,7 @@ from repro.core import (
     CBPParams,
     Mode,
     PrefetchMode,
+    ScheduleSegment,
     fig8_schedule,
     throttle_decision,
 )
@@ -123,14 +131,14 @@ class BatchedCMPPlant:
         # the batched plant is the JAX path by construction and uses the
         # remaining CMPConfig fields (capacities, llc_extra_cycles) as-is.
         # The allocator follows suit: "auto" keeps allocation on device,
-        # and "auto" timelines fuse into one device program per manager —
-        # unless the allocator was forced onto the host, which only the
-        # segment loop can honour (the fused greedy is traced).
+        # and "auto" timelines stack the whole manager set into one device
+        # program — unless the allocator was forced onto the host, which
+        # only the segment loop can honour (the fused greedy is traced).
         self.allocator_backend = _resolve_allocator_backend(
             self.config, default="jax")
         self.timeline_backend = _resolve_timeline_backend(
             self.config,
-            default="fused" if self.allocator_backend == "jax"
+            default="stacked" if self.allocator_backend == "jax"
             else "segment")
         self.n_mixes, self.n_clients = np.asarray(self.apps.cpi_base).shape
         self.total_cache_units = self.config.total_cache_units
@@ -318,20 +326,22 @@ class BatchedCoordinator:
     def run(self, total_ms: float) -> None:
         """Execute the Fig. 8 timeline over every batch row.
 
-        The default ("fused") path compiles the whole timeline — every
-        controller decision included — into one jitted device program
-        (:func:`repro.sim.timeline_jax.run_timeline`); the "segment" path
-        is the PR 2 host loop of one device call per segment, kept for
-        parity testing and debugging.  Both execute the identical
-        :func:`~repro.core.fig8_schedule` segment list.
+        The default path compiles the whole timeline — every controller
+        decision included — into one jitted device program (the K=1 case
+        of :func:`repro.sim.timeline_jax.run_timelines`, built from the
+        same :func:`_fig8_spec` wiring the stacked sweep uses); the
+        "segment" path is the PR 2 host loop of one device call per
+        segment, kept for parity testing and debugging.  Both execute the
+        identical :func:`~repro.core.fig8_schedule` segment list.
         """
-        schedule = fig8_schedule(
-            total_ms, self.params,
-            self.prefetch_mode == PrefetchMode.DYNAMIC)
-        if self.plant.timeline_backend == "fused":
-            self._run_fused(schedule)
+        if self.plant.timeline_backend == "segment":
+            self._run_segments(fig8_schedule(
+                total_ms, self.params,
+                self.prefetch_mode == PrefetchMode.DYNAMIC))
         else:
-            self._run_segments(schedule)
+            # "fused" and "stacked" coincide for a single manager: the
+            # per-manager fused program IS the K=1 stacked program.
+            self._run_fused(total_ms)
         if self.cache_mode == Mode.DYNAMIC:
             _check_units_capacity(
                 self.alloc.cache_units, self.plant.total_cache_units,
@@ -341,17 +351,11 @@ class BatchedCoordinator:
                 self.alloc.bandwidth, self.plant.total_bandwidth,
                 "BatchedCoordinator.run")
 
-    def _run_fused(self, schedule) -> None:
-        res = timeline_jax.run_timeline(
-            self.plant.apps, schedule,
-            variant="fig8",
-            init_units=self.alloc.cache_units,
-            init_bandwidth=self.alloc.bandwidth,
-            init_prefetch=self.alloc.prefetch_on,
-            cache_dynamic=self.cache_mode == Mode.DYNAMIC,
-            bandwidth_dynamic=self.bandwidth_mode == Mode.DYNAMIC,
-            cache_partitioned=self.cache_mode != Mode.UNPARTITIONED,
-            bandwidth_partitioned=self.bandwidth_mode != Mode.UNPARTITIONED,
+    def _run_fused(self, total_ms: float) -> None:
+        spec = _fig8_spec(self.plant, self.cache_mode, self.bandwidth_mode,
+                          self.prefetch_mode, total_ms, self.params)
+        res = timeline_jax.run_timelines(
+            self.plant.apps, [spec],
             total_units=self.plant.total_cache_units,
             total_bandwidth=self.plant.total_bandwidth,
             llc_extra_cycles=self.plant.config.llc_extra_cycles,
@@ -360,7 +364,7 @@ class BatchedCoordinator:
             min_bandwidth_allocation=self.rows.min_bandwidth_allocation,
             atd_decay=self.rows.atd_decay,
             bandwidth_delay_decay=self.rows.bandwidth_delay_decay,
-        )
+        )[0]
         self._ipc_acc = res.ipc_acc
         self._w_acc = res.w_acc
         self.alloc.cache_units = res.cache_units
@@ -403,12 +407,13 @@ class BatchedCoordinator:
 def _run_cppf_batched(plant: BatchedCMPPlant, total_ms: float,
                       params: CBPParams,
                       params_rows: Optional[Sequence[CBPParams]] = None):
-    """Vectorized CPpf (mirrors ``managers._run_cppf`` per mix).
+    """Vectorized CPpf on the SEGMENT path (mirrors ``managers._run_cppf``).
 
-    On the fused path the probe + reallocation timeline is one jitted
-    device program (``timeline_jax.run_timeline(variant="cppf")``); on the
-    segment path each friendly-mask allocation is ONE batched device call
-    per reconfiguration (``CacheController.allocate_masked``).
+    Each friendly-mask allocation is ONE batched device call per
+    reconfiguration (``CacheController.allocate_masked``).  The fused
+    paths never come here: :func:`_manager_spec` is the single source of
+    CPpf's fused timeline wiring (``variant="cppf"`` via
+    ``timeline_jax.run_timelines``).
     """
     m, n = plant.n_mixes, plant.n_clients
     total_units = plant.total_cache_units
@@ -425,28 +430,6 @@ def _run_cppf_batched(plant: BatchedCMPPlant, total_ms: float,
     def check(units: np.ndarray) -> None:
         _check_units_capacity(units, total_units, "CPpf")
         _check_bandwidth_capacity(bw, plant.total_bandwidth, "CPpf")
-
-    if plant.timeline_backend == "fused":
-        res = timeline_jax.run_timeline(
-            plant.apps, timeline_jax.cppf_schedule(total_ms, params),
-            variant="cppf",
-            init_units=equal_units,
-            init_bandwidth=bw,
-            init_prefetch=np.ones((m, n), dtype=bool),
-            cache_dynamic=True,
-            bandwidth_dynamic=False,
-            cache_partitioned=True,
-            bandwidth_partitioned=False,
-            total_units=total_units,
-            total_bandwidth=plant.total_bandwidth,
-            llc_extra_cycles=plant.config.llc_extra_cycles,
-            min_ways=rows.min_ways,
-            speedup_threshold=rows.speedup_threshold,
-            atd_decay=rows.atd_decay,
-            bandwidth_delay_decay=rows.bandwidth_delay_decay,
-        )
-        check(res.cache_units)
-        return res.mean_ipc(), make_alloc(res.cache_units, res.prefetch_on)
 
     cache_ctl = CacheController(
         total_units, params.min_ways, backend=plant.allocator_backend)
@@ -496,6 +479,153 @@ def _run_one_manager(
         params_rows=params_rows)
     coord.run(total_ms)
     return coord.mean_ipc(), coord.alloc
+
+
+def _fig8_spec(plant: BatchedCMPPlant, cache_mode: Mode, bw_mode: Mode,
+               pf_mode: PrefetchMode, total_ms: float, params: CBPParams,
+               name: str = "") -> timeline_jax.TimelineSpec:
+    """A Fig. 8 coordinator timeline as a TimelineSpec — THE single
+    source of the fused fig8 wiring (mode flags, step-0 state,
+    schedule), shared by the stacked sweep, the per-manager fused
+    reference path and :class:`BatchedCoordinator`.
+    """
+    m, n = plant.n_mixes, plant.n_clients
+    units = np.full(n, plant.total_cache_units // n, dtype=np.int64)
+    units[: plant.total_cache_units - int(units.sum())] += 1
+    if (cache_mode != Mode.DYNAMIC and bw_mode != Mode.DYNAMIC
+            and pf_mode != PrefetchMode.DYNAMIC):
+        # Fully static managers have no boundaries to hit and a
+        # segmentation-invariant time-weighted mean: one segment spanning
+        # the whole timeline evaluates the identical model exactly once
+        # instead of once per reconfiguration interval.
+        schedule = [ScheduleSegment("run", total_ms)]
+    else:
+        schedule = fig8_schedule(total_ms, params,
+                                 pf_mode == PrefetchMode.DYNAMIC)
+    return timeline_jax.TimelineSpec(
+        schedule=schedule,
+        variant="fig8",
+        cache_dynamic=cache_mode == Mode.DYNAMIC,
+        bandwidth_dynamic=bw_mode == Mode.DYNAMIC,
+        cache_partitioned=cache_mode != Mode.UNPARTITIONED,
+        bandwidth_partitioned=bw_mode != Mode.UNPARTITIONED,
+        init_units=np.tile(units, (m, 1)),
+        init_bandwidth=np.full((m, n), plant.total_bandwidth / n),
+        init_prefetch=np.full((m, n), pf_mode == PrefetchMode.ON,
+                              dtype=bool),
+        name=name)
+
+
+def _manager_spec(plant: BatchedCMPPlant, name: str, total_ms: float,
+                  params: CBPParams) -> timeline_jax.TimelineSpec:
+    """One Table-3 manager as a :class:`~repro.sim.timeline_jax.TimelineSpec`.
+
+    Mirrors :func:`_run_cppf_batched`'s segment-path setup exactly — same
+    schedules, same step-0 state — so stacking the specs reproduces the
+    per-manager runs bit-for-bit.
+    """
+    m, n = plant.n_mixes, plant.n_clients
+    if name == "CPpf":
+        return timeline_jax.TimelineSpec(
+            schedule=timeline_jax.cppf_schedule(total_ms, params),
+            variant="cppf",
+            cache_dynamic=True,
+            bandwidth_dynamic=False,
+            cache_partitioned=True,
+            bandwidth_partitioned=False,
+            init_units=np.full((m, n), plant.total_cache_units // n,
+                               dtype=np.int64),
+            init_bandwidth=np.full((m, n), plant.total_bandwidth / n),
+            init_prefetch=np.ones((m, n), dtype=bool),
+            name=name)
+    cache_mode, bw_mode, pf_mode = TABLE3_MODES[name]
+    return _fig8_spec(plant, cache_mode, bw_mode, pf_mode, total_ms,
+                      params, name=name)
+
+
+def _run_managers_stacked(
+    plant: BatchedCMPPlant,
+    names: Sequence[str],
+    total_ms: float,
+    params: CBPParams,
+    params_rows: Optional[Sequence[CBPParams]] = None,
+) -> Dict[str, Tuple[np.ndarray, Allocation]]:
+    """The whole manager set over every batch row — ONE device program.
+
+    Each manager keeps its own segment table and knob flags; the tables
+    stack along the leading manager axis and the (manager, mix) grid
+    shards over devices (:func:`repro.sim.timeline_jax.run_timelines`).
+    Capacity invariants are checked per manager exactly as on the
+    per-manager paths.
+    """
+    rows = _per_row_params(params, params_rows, plant.n_mixes)
+    specs = [_manager_spec(plant, name, total_ms, rows.schedule)
+             for name in names]
+    results = timeline_jax.run_timelines(
+        plant.apps, specs,
+        total_units=plant.total_cache_units,
+        total_bandwidth=plant.total_bandwidth,
+        llc_extra_cycles=plant.config.llc_extra_cycles,
+        min_ways=rows.min_ways,
+        speedup_threshold=rows.speedup_threshold,
+        min_bandwidth_allocation=rows.min_bandwidth_allocation,
+        atd_decay=rows.atd_decay,
+        bandwidth_delay_decay=rows.bandwidth_delay_decay,
+    )
+    out: Dict[str, Tuple[np.ndarray, Allocation]] = {}
+    for spec, res in zip(specs, results):
+        if spec.variant == "cppf":
+            cache_mode, bw_mode = Mode.DYNAMIC, Mode.UNPARTITIONED
+            _check_units_capacity(
+                res.cache_units, plant.total_cache_units, "CPpf")
+            _check_bandwidth_capacity(
+                res.bandwidth, plant.total_bandwidth, "CPpf")
+        else:
+            cache_mode, bw_mode, _pf = TABLE3_MODES[spec.name]
+            where = f"run_sweep[{spec.name}]"
+            if cache_mode == Mode.DYNAMIC:
+                _check_units_capacity(
+                    res.cache_units, plant.total_cache_units, where)
+            if bw_mode == Mode.DYNAMIC:
+                _check_bandwidth_capacity(
+                    res.bandwidth, plant.total_bandwidth, where)
+        alloc = Allocation(
+            cache_units=res.cache_units,
+            bandwidth=res.bandwidth,
+            prefetch_on=res.prefetch_on,
+            cache_mode=cache_mode,
+            bandwidth_mode=bw_mode,
+        )
+        out[spec.name] = (res.mean_ipc(), alloc)
+    return out
+
+
+def _run_managers(
+    plant: BatchedCMPPlant,
+    names: Sequence[str],
+    total_ms: float,
+    params: CBPParams,
+    params_rows: Optional[Sequence[CBPParams]] = None,
+) -> Dict[str, Tuple[np.ndarray, Allocation]]:
+    """Dispatch a manager set to the plant's timeline backend.
+
+    "stacked" runs every manager in one device program; "fused" runs the
+    SAME specs one program per manager (the stacking parity reference —
+    bit-identical by construction plus greedy/model batch invariance);
+    "segment" loops the PR 2 host path per manager.
+    """
+    if plant.timeline_backend == "segment":
+        return {name: _run_one_manager(plant, name, total_ms, params,
+                                       params_rows)
+                for name in names}
+    if plant.timeline_backend == "stacked" and names:
+        return _run_managers_stacked(
+            plant, names, total_ms, params, params_rows)
+    out: Dict[str, Tuple[np.ndarray, Allocation]] = {}
+    for name in names:
+        out.update(_run_managers_stacked(
+            plant, [name], total_ms, params, params_rows))
+    return out
 
 
 @dataclasses.dataclass
@@ -575,9 +705,9 @@ def run_sweep(
         params = params or CBPParams()
         ipc: Dict[str, np.ndarray] = {}
         final: Dict[str, Allocation] = {}
-        for name in names:
-            ipc[name], final[name] = _run_one_manager(
-                plant, name, total_ms, params)
+        for name, (mipc, alloc) in _run_managers(
+                plant, names, total_ms, params).items():
+            ipc[name], final[name] = mipc, alloc
         return SweepResult(
             manager_names=names,
             mixes=plant.mixes,
@@ -609,8 +739,8 @@ def run_sweep(
                 and pm != PrefetchMode.DYNAMIC)
 
     static_names = [name for name in names if _params_static(name)]
-    for name in static_names:
-        mipc, alloc = _run_one_manager(plant, name, total_ms, grid[0])
+    for name, (mipc, alloc) in _run_managers(
+            plant, static_names, total_ms, grid[0]).items():
         ipc[name][:] = np.asarray(mipc)[None]
         units[name][:] = np.asarray(alloc.cache_units)[None]
         bws[name][:] = np.asarray(alloc.bandwidth)[None]
@@ -628,9 +758,9 @@ def run_sweep(
         gplant = BatchedCMPPlant(tiled, config)
         rows = [grid[pi] for pi in idxs for _ in range(M)]
         G = len(idxs)
-        for name in grid_names:
-            mipc, alloc = _run_one_manager(
-                gplant, name, total_ms, rows[0], params_rows=rows)
+        for name, (mipc, alloc) in _run_managers(
+                gplant, grid_names, total_ms, rows[0],
+                params_rows=rows).items():
             ipc[name][idxs] = np.asarray(mipc).reshape(G, M, n)
             units[name][idxs] = np.asarray(
                 alloc.cache_units).reshape(G, M, n)

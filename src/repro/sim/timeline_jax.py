@@ -1,42 +1,65 @@
-"""Fused Fig. 8 timeline: one jitted device program per (manager, timeline).
+"""Fused Fig. 8 timelines: ONE jitted device program for a whole manager set.
 
-PR 2 made every timeline *segment* a device call; this module removes the
-remaining host loop.  A manager's entire Fig. 8 decision timeline — cache
-reallocation (batched Lookahead greedy), Algorithm-1 bandwidth partitioning
-and Algorithm-2 prefetch throttling — compiles into a single
-``jax.lax.scan`` over a precomputed static segment table, carrying
-(cache units, bandwidth, prefetch mask, friendly mask, ATD accumulators,
-bandwidth-delay EMA, IPC accumulator, sampled off-IPC) as scan state.  A
-full Table-3 sweep is then **one device program per (manager, timeline)**:
-inputs transfer once, results transfer once, zero per-segment host
+PR 2 made every timeline *segment* a device call; PR 3 removed the
+per-segment host loop (one program per (manager, timeline)); this revision
+removes the per-manager host loop too.  Every Table-3 manager keeps its own
+segment table, the tables stack along a new leading *manager* axis (shorter
+timelines pad with frozen ``NOOP`` rows), and the per-manager knob flags —
+``cache_dynamic``, ``bandwidth_dynamic``, ``cache_partitioned``,
+``bandwidth_partitioned``, the CPpf variant mask — become traced ``(K,)``
+arrays instead of static trace constants.  A full Table-3 sweep is then
+**one device program total** (plus the shared baseline evaluation): inputs
+transfer once, results transfer once, zero per-manager or per-segment host
 round-trips (counter: :func:`repro.core.device_dispatches`).
 
-Segment table
+Stacking is exact, not approximate
+    Batch rows never interact — the model, the batched Lookahead greedy,
+    Algorithm-1 bandwidth partitioning and Algorithm-2 throttling are all
+    row-independent — so manager k executing rows ``0..S_k-1`` of the
+    stacked table reproduces its standalone fused trajectory bit-for-bit;
+    rows past ``S_k`` are ``NOOP``: zero accumulation weight, no
+    reconfigure flag, no controller update (``x + v*0`` and masked
+    ``where`` updates are bitwise no-ops).  :func:`run_timeline` (one
+    manager) is literally the K=1 case of :func:`run_timelines`, and
+    ``tests/test_timeline_fused.py`` pins stacked == per-manager for every
+    Table-3 manager on 1 and 8 forced host devices.
+
+Segment tables
     :func:`segment_table` encodes a :func:`~repro.core.fig8_schedule`
-    segment list as (kind, duration, reconfigure?) arrays.  Zero-duration
-    ``reconfigure`` boundaries are folded into the *following* segment as a
-    flag (a trailing boundary becomes a zero-duration ``NOOP`` row), so
-    every scan step is: maybe-reconfigure, then run one interval of the
-    model and update controller state elementwise by segment kind.
+    segment list as (kind, duration, reconfigure?) arrays; zero-duration
+    ``reconfigure`` boundaries fold into the *following* segment's flag (a
+    trailing boundary becomes a zero-duration ``NOOP`` row).
+    :func:`stack_tables` right-pads the per-manager tables to the longest
+    and stacks them ``(K, S)``.  Each scan step is: maybe-reconfigure
+    (per-manager flag), run one interval of the model, update controller
+    state elementwise by per-manager segment kind.
 
 Controllers in the traced region
     The cache step calls the PR 2 batched greedy
-    (:func:`repro.core.cache_controller_jax.lookahead_traced` /
-    ``lookahead_masked_traced`` for the CPpf variant); bandwidth uses
+    (:mod:`repro.core.cache_controller_jax`) through the masked entry
+    point — non-CPpf rows pass an all-active mask, which reduces to the
+    plain Lookahead exactly, and rows not reconfiguring at this step pass
+    an all-inactive mask, which retires them from the greedy's while_loop
+    after a single trip; bandwidth uses
     :func:`repro.core.allocate_bandwidth_jax` and prefetch
-    :func:`repro.core.throttle_decision_jax` — all batched over mixes and
-    ``param_grid`` rows, with the ``min_allocation * n > total``
-    feasibility checks hoisted out of the traced region (validated once on
-    the host per program).
+    :func:`repro.core.throttle_decision_jax`, with the ``min_allocation *
+    n > total`` feasibility checks hoisted out of the traced region.
+    The interval model runs through
+    :func:`repro.sim.memsys_jax._evaluate_rowflags` so each manager row
+    gets its own partitioned/unpartitioned regime.
 
 Sharding
-    The leading mix axis is sharded across devices with
-    :func:`repro.distributed.shard_rows` (``shard_map`` + ``make_mesh``)
-    whenever more than one device is visible — force N host devices with
+    The (manager, mix) grid is sharded across devices with
+    :func:`repro.distributed.shard_grid` (2-D ``make_mesh`` +
+    ``shard_map``): manager groups spread over the first mesh axis, mixes
+    over the second, so different managers' timelines execute on
+    different devices concurrently.  Shard counts come from
+    :func:`repro.distributed.grid_shard_counts` (clamped per axis, most
+    balanced factorization); both axes pad by replicating their last row
+    and the padding is sliced off after the program returns, so results
+    are identical on 1 and N devices.  Force N host devices with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to test
-    locally.  Rows are padded to a multiple of the device count and the
-    padding is sliced off after the program returns, so results are
-    identical on 1 and N devices (``tests/test_timeline_fused.py``).
+    locally.
 
 Parity contract: fused trajectories match the PR 2 segment-loop path (and
 therefore the scalar numpy reference within its 1e-5 model tolerance) —
@@ -58,20 +81,19 @@ from repro.core.bandwidth_controller import (
     allocate_bandwidth_jax,
     check_bandwidth_floor,
 )
-from repro.core.cache_controller_jax import (
-    lookahead_masked_traced,
-    lookahead_traced,
-)
+from repro.core.cache_controller_jax import lookahead_masked_traced
 from repro.core.coordinator import ScheduleSegment
 from repro.core.dispatch import record_dispatch
 from repro.core.prefetch_controller import throttle_decision_jax
 from repro.sim import memsys_jax
 from repro.sim.apps import AppArrays
-from repro.sim.memsys import FIXED_POINT_ITERS
+from repro.sim.memsys import FIXED_POINT_ITERS, FREQ_GHZ
 
-#: Segment kinds of the fused table.  ``NOOP`` only appears as the carrier
-#: of a trailing reconfigure boundary (CPpf reallocates after its final
-#: interval); its zero-duration model evaluation never accumulates.
+#: Segment kinds of the fused table.  ``NOOP`` rows freeze a manager: the
+#: zero-duration model evaluation never accumulates and no controller
+#: fires.  They appear as the carrier of a trailing reconfigure boundary
+#: (CPpf reallocates after its final interval) and as right-padding when
+#: managers with shorter timelines stack against longer ones.
 SAMPLE_OFF, SAMPLE_ON, RUN, NOOP = 0, 1, 2, 3
 
 _KIND_CODES = {"sample_off": SAMPLE_OFF, "sample_on": SAMPLE_ON, "run": RUN}
@@ -126,8 +148,84 @@ def cppf_schedule(total_ms: float, params) -> List[ScheduleSegment]:
 
 
 @dataclasses.dataclass
+class TimelineSpec:
+    """One manager's timeline + knobs inside a stacked program.
+
+    ``init_units`` / ``init_bandwidth`` / ``init_prefetch`` are the
+    ``(M, n)`` step-0 state; the booleans are the Table-3 mode flags that
+    used to be static per-program trace constants and now ride the
+    manager axis as data.
+    """
+
+    schedule: Sequence[ScheduleSegment]
+    variant: str                       # "fig8" | "cppf"
+    cache_dynamic: bool
+    bandwidth_dynamic: bool
+    cache_partitioned: bool
+    bandwidth_partitioned: bool
+    init_units: np.ndarray
+    init_bandwidth: np.ndarray
+    init_prefetch: np.ndarray
+    name: str = ""
+
+    def __post_init__(self):
+        if self.variant not in ("fig8", "cppf"):
+            raise ValueError(f"unknown timeline variant {self.variant!r}")
+
+
+def stack_tables(
+    tables: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+    accumulate_kinds: Sequence[Optional[int]],
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Stack per-manager segment tables into (K, S) arrays.
+
+    Any order-preserving injection of a manager's rows into the unified
+    slot axis is exact: batch rows never interact, and the frozen ``NOOP``
+    slots between a manager's rows are bitwise no-ops for its scan state.
+    This placement exploits that freedom twice:
+
+    * shorter tables right-pad with ``NOOP`` slots (zero duration, no
+      reconfigure);
+    * reconfigure-carrying rows snap onto the *longest* table's
+      reconfigure slots whenever the ordering allows, so the stacked
+      program fires its (batch-wide) Lookahead greedy at as few slots as
+      possible — e.g. the Table-3 set's non-sampling managers and CPpf
+      reallocate on the same slots as the sampling managers instead of
+      interleaving 1.7x more boundary steps.
+
+    ``accumulate_kinds[k]`` restricts manager k's accumulation weight to
+    one segment kind (CPpf's probe intervals are outside the measured
+    window: only ``RUN`` accumulates); ``None`` accumulates every row.
+    """
+    lens = [len(t[0]) for t in tables]
+    s_max = max(lens)
+    host_reconf = np.flatnonzero(tables[int(np.argmax(lens))][2])
+    K = len(tables)
+    kinds = np.full((K, s_max), NOOP, dtype=np.int32)
+    acc = np.zeros((K, s_max), dtype=np.float64)
+    reconf = np.zeros((K, s_max), dtype=bool)
+    for k, ((kk, dd, rr), only) in enumerate(zip(tables, accumulate_kinds)):
+        L = len(kk)
+        s = 0
+        for j in range(L):
+            sj = s
+            if rr[j]:
+                # Snap to the next shared reconfigure slot if one fits
+                # before the remaining rows run out of room.
+                cand = host_reconf[(host_reconf >= s)
+                                   & (host_reconf <= s_max - (L - j))]
+                if cand.size:
+                    sj = int(cand[0])
+            kinds[k, sj] = kk[j]
+            acc[k, sj] = (dd[j] if only is None or kk[j] == only else 0.0)
+            reconf[k, sj] = rr[j]
+            s = sj + 1
+    return kinds, acc, reconf
+
+
+@dataclasses.dataclass
 class TimelineResult:
-    """Final state of one fused (manager, timeline) program over M mixes."""
+    """Final state of one manager's fused timeline over M mixes."""
 
     ipc_acc: np.ndarray        # (M, n) time-weighted IPC sum
     w_acc: float               # accumulated weight (ms) — static per table
@@ -141,62 +239,157 @@ class TimelineResult:
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled_timeline(
-    variant: str,
-    cache_dynamic: bool,
-    bandwidth_dynamic: bool,
-    cache_partitioned: bool,
-    bandwidth_partitioned: bool,
+def _compiled_stacked(
     has_sampling: bool,
+    any_cache_dynamic: bool,
+    any_bandwidth_dynamic: bool,
+    max_concurrent_realloc: int,
     total_units: int,
     iters: int,
-    n_shards: int,
+    grid_shards: Tuple[int, int],
 ):
-    """Build the jitted (optionally shard_mapped) timeline executor.
+    """Build the jitted (optionally shard_mapped) stacked-timeline executor.
 
     Cached per static configuration so repeated sweeps reuse both the
     Python wrapper and XLA's compilation cache; jit retraces on new array
-    shapes (different M, n or segment count) as usual.  Controller state
-    that a manager's modes can never read (ATD counters without a dynamic
-    cache, the delay EMA without dynamic bandwidth, the A/B machinery
-    without sampling segments) is statically dropped from the step.
+    shapes (different K, M, n or segment count) as usual.  Manager knobs
+    are *traced* ``(K,)`` arrays, so e.g. every all-static manager subset
+    shares one compilation; only controller machinery no manager in the
+    batch can ever reach (ATD counters without a dynamic cache, the delay
+    EMA without dynamic bandwidth, the A/B sampling state) is statically
+    dropped from the step.
     """
     f64 = jnp.float64
     total_cache_f = float(total_units)
-    track_atd = cache_dynamic  # CPpf is always cache-dynamic
 
-    def worker(sharded, replicated):
-        p = {k: sharded["p_" + k] for k in memsys_jax.PARAM_FIELDS}
-        min_ways = sharded["min_ways"]                  # (M,) int32
-        thr = sharded["speedup_threshold"]              # (M, 1)
-        min_bw = sharded["min_bandwidth_allocation"]    # (M, 1)
-        atd_decay = sharded["atd_decay"]                # (M, 1, 1)
-        bw_decay = sharded["bandwidth_delay_decay"]     # (M, 1)
+    def worker(grid, mgr, replicated):
+        # The whole scan runs in FLATTENED (K*M, ...) row form: XLA CPU's
+        # codegen for the model's axis(-1) reductions is bit-stable across
+        # 2-D row counts but not across 3-D leading shapes, and the
+        # stacked-vs-per-manager bit-parity contract rides on that
+        # (``tests/test_timeline_fused.py``).  The (K, M) structure only
+        # reappears on the outputs so shard_map can split both mesh axes.
+        K, M, n = grid["p_cpi_base"].shape
+        B = K * M
+
+        def rows(a):
+            return a.reshape((B,) + a.shape[2:])
+
+        p = {k: rows(grid["p_" + k])
+             for k in memsys_jax.PARAM_FIELDS}       # (B, n)
+        min_ways = rows(grid["min_ways"])            # (B,) int32
+        thr = rows(grid["speedup_threshold"])        # (B, 1)
+        min_bw = rows(grid["min_bandwidth_allocation"])
+        atd_decay = rows(grid["atd_decay"])          # (B, 1, 1)
+        bw_decay = rows(grid["bandwidth_delay_decay"])
         total_bw = replicated["total_bandwidth"]
         llc_extra = replicated["llc_extra_cycles"]
 
+        # Per-manager knob flags expanded to per-row (B, 1) masks.
+        def per_row(flag):
+            return jnp.repeat(flag, M)[:, None]
+
+        cache_dyn_k = mgr["cache_dynamic"]                 # (K,)
+        bw_dyn = per_row(mgr["bandwidth_dynamic"])
+        cache_part = per_row(mgr["cache_partitioned"])
+        bw_part = per_row(mgr["bandwidth_partitioned"])
+        is_cppf = per_row(mgr["is_cppf"])
+
+        if any_cache_dynamic:
+            # The ATD is a LINEAR functional of the per-step hit curves,
+            # and the hit curves take only two values per client over the
+            # whole timeline (prefetch on / off — ``pf`` is always exactly
+            # 0.0 or 1.0).  So instead of accumulating a (B, n, U+1) ATD
+            # grid every step, the scan carries two (B, n) weight
+            # accumulators — the decayed kilo-instruction mass observed
+            # with the prefetcher off resp. on — and the full ATD grid
+            # ``hits_off * w_off + hits_on * w_on`` materializes only at
+            # reconfigure boundaries, right where the Lookahead greedy
+            # consumes it.  The exp-heavy ``mpki_curve`` grids precompute
+            # once per program.  (The per-step accumulation used to be
+            # ~70% of a Table-3 sweep's wall time.)
+            u_pts = jnp.arange(total_units + 1, dtype=f64)
+            pc = {k: v[..., :, None] for k, v in p.items()}  # (B, n, 1)
+
+            def hits_for(pf_const):
+                units_g = u_pts - pc["pf_pollution"] * pf_const
+                m_g = memsys_jax.mpki_curve(pc, units_g)
+                eff_miss = m_g * (1.0 - pc["pf_cov"] * pf_const)
+                return jnp.maximum(pc["apki"] - eff_miss, 0.0)
+
+            hits_off = hits_for(jnp.asarray(0.0, f64))
+            hits_on = hits_for(jnp.asarray(1.0, f64))
+
         def reconfigure(operand):
-            """Boundary step: cache -> bandwidth (paper priority order)."""
-            units, bw, atd, bw_acc, active = operand
-            if cache_dynamic:
-                if variant == "cppf":
+            """Boundary step: cache -> bandwidth (paper priority order).
+
+            Cache reallocation runs as one *mini-greedy per reconfiguring
+            manager block*: the manager's M-row block is carved out of the
+            batch with a traced ``dynamic_slice``, its ATD grid
+            materializes from the two weight coefficients at exactly the
+            per-manager (M, n, U+1) shape, and the Lookahead while_loop
+            pays only that manager's own trip count and row width — the
+            same work profile as the per-manager fused path, just inside
+            one program.  Slot alignment (:func:`stack_tables`) keeps the
+            number of boundary slots minimal; managers not reallocating
+            here are untouched.
+            """
+            units, bw, w_off, w_on, bw_acc, active, do_r, realloc_k \
+                = operand
+            if any_cache_dynamic:
+                # Reallocating managers first (ascending index, stable) —
+                # real managers outrank any K-padding duplicates.
+                order = jnp.argsort(~realloc_k, stable=True)
+                min32 = min_ways.astype(jnp.int32)
+
+                def blk(a, off):
+                    return jax.lax.dynamic_slice_in_dim(a, off, M, axis=0)
+
+                # Under manager-axis sharding the global concurrency
+                # bound can exceed this shard's manager count — clamp.
+                for g in range(min(max_concurrent_realloc, K)):
+                    k_g = order[g]
+                    valid = realloc_k[k_g]
+                    off = k_g * M
+                    # An all-inactive mask (non-CPpf rows pass all-active,
+                    # which reduces to the plain Lookahead; invalid
+                    # sentinel blocks retire after one trip).
+                    act_b = blk(active, off) & valid
+                    atd_b = (blk(hits_off, off)
+                             * blk(w_off, off)[..., :, None]
+                             + blk(hits_on, off)
+                             * blk(w_on, off)[..., :, None])
                     fresh = lookahead_masked_traced(
-                        atd, min_ways, active, total_units)
-                else:
-                    fresh = lookahead_traced(atd, min_ways, total_units)
-                units = fresh.astype(units.dtype)
-            atd = atd * atd_decay
-            if bandwidth_dynamic:
-                bw = allocate_bandwidth_jax(bw_acc, total_bw, min_bw)
-            return units, bw, atd
+                        atd_b, blk(min32, off), act_b, total_units)
+                    old_b = blk(units, off)
+                    new_b = jnp.where(valid, fresh.astype(units.dtype),
+                                      old_b)
+                    units = jax.lax.dynamic_update_slice_in_dim(
+                        units, new_b, off, axis=0)
+                # The boundary ATD decay is a scalar multiply of the whole
+                # grid, i.e. of both weight coefficients.
+                decay_w = atd_decay[..., 0]                    # (B, 1)
+                w_off = jnp.where(do_r, w_off * decay_w, w_off)
+                w_on = jnp.where(do_r, w_on * decay_w, w_on)
+            if any_bandwidth_dynamic:
+                bw = jnp.where(do_r & bw_dyn,
+                               allocate_bandwidth_jax(bw_acc, total_bw,
+                                                      min_bw),
+                               bw)
+            return units, bw, w_off, w_on
 
         def step(carry, seg):
-            kind, dt, reconf = seg
-            units, bw, pf, active, atd, bw_acc, ipc_acc, off_ipc = carry
-            units, bw, atd = jax.lax.cond(
-                reconf, reconfigure,
-                lambda op: (op[0], op[1], op[2]),
-                (units, bw, atd, bw_acc, active))
+            kind_k, acc_k, reconf_k = seg                      # (K,) each
+            units, bw, pf, active, w_off, w_on, bw_acc, ipc_acc, off_ipc \
+                = carry
+            kind = jnp.repeat(kind_k, M)[:, None]              # (B, 1)
+            acc_dt = jnp.repeat(acc_k, M)[:, None]
+            do_r = jnp.repeat(reconf_k, M)[:, None]
+            units, bw, w_off, w_on = jax.lax.cond(
+                jnp.any(reconf_k), reconfigure,
+                lambda op: (op[0], op[1], op[2], op[3]),
+                (units, bw, w_off, w_on, bw_acc, active, do_r,
+                 reconf_k & cache_dyn_k))
 
             # The A/B samples force the prefetcher off/on for everyone;
             # other segments run the current per-client setting.
@@ -206,63 +399,215 @@ def _compiled_timeline(
                                            pf.astype(f64)))
             else:
                 pf_f = pf.astype(f64)
-            out = memsys_jax._evaluate_jit(
+            out = memsys_jax._evaluate_rowflags(
                 p, units.astype(f64), bw, pf_f,
                 jnp.asarray(total_cache_f, f64), total_bw, llc_extra,
-                cache_partitioned=cache_partitioned,
-                bandwidth_partitioned=bandwidth_partitioned,
-                iters=iters)
+                cache_part, bw_part, iters=iters)
             ipc, q_ns = out[0], out[1]
 
-            # fig8 accumulates every executed segment (samples included);
-            # CPpf's probe intervals are outside the measured window.
-            if variant == "cppf":
-                acc_dt = jnp.where(kind == RUN, dt, 0.0)
-            else:
-                acc_dt = dt
-            if track_atd:
-                curves = memsys_jax._utility_curves_jit(
-                    p, pf_f, ipc, jnp.asarray(1.0, f64),
-                    total_units=total_units)
-                atd = atd + curves * acc_dt
+            # Accumulation weights come from the stacked table: fig8
+            # accumulates every executed segment (samples included),
+            # CPpf's probe intervals and all NOOP rows carry weight 0 —
+            # a bitwise no-op on the accumulators.
+            if any_cache_dynamic:
+                kappa = (ipc * FREQ_GHZ * 1e6
+                         * jnp.asarray(1.0, f64) / 1000.0) * acc_dt
+                on_mask = pf_f == 1.0
+                w_on = w_on + jnp.where(on_mask, kappa, 0.0)
+                w_off = w_off + jnp.where(on_mask, 0.0, kappa)
             ipc_acc = ipc_acc + ipc * acc_dt
-            if bandwidth_dynamic:
-                bw_acc = bw_decay * bw_acc + q_ns * acc_dt
+            if any_bandwidth_dynamic:
+                # The delay EMA advances once per *executed* segment of
+                # the manager's own table — frozen NOOP rows must not
+                # decay it, so the update is gated, not weight-folded.
+                executes = (kind != NOOP) & bw_dyn
+                bw_acc = jnp.where(executes,
+                                   bw_decay * bw_acc + q_ns * acc_dt,
+                                   bw_acc)
 
             if has_sampling:
                 decision = throttle_decision_jax(ipc, off_ipc, thr)
-                if variant == "cppf":
-                    active = jnp.where(kind == SAMPLE_ON, ~decision, active)
-                else:
-                    pf = jnp.where(kind == SAMPLE_ON, decision, pf)
+                sample_on = kind == SAMPLE_ON
+                active = jnp.where(sample_on & is_cppf, ~decision, active)
+                pf = jnp.where(sample_on & ~is_cppf, decision, pf)
                 off_ipc = jnp.where(kind == SAMPLE_OFF, ipc, off_ipc)
-            return ((units, bw, pf, active, atd, bw_acc, ipc_acc, off_ipc),
-                    None)
+            return ((units, bw, pf, active, w_off, w_on, bw_acc, ipc_acc,
+                     off_ipc), None)
 
-        carry0 = (sharded["units0"], sharded["bw0"], sharded["pf0"],
-                  sharded["active0"], sharded["atd0"], sharded["bw_acc0"],
-                  sharded["ipc_acc0"], sharded["off_ipc0"])
-        xs = (replicated["kinds"], replicated["durations"],
-              replicated["reconf"])
+        zeros = jnp.zeros((B, n), dtype=f64)
+        carry0 = (rows(grid["units0"]), rows(grid["bw0"]),
+                  rows(grid["pf0"]), rows(grid["active0"]),
+                  zeros, zeros, zeros, zeros, zeros)
+        xs = (mgr["kinds"].T, mgr["acc"].T, mgr["reconf"].T)   # (S, K)
         carry, _ = jax.lax.scan(step, carry0, xs)
-        units, bw, pf, active, _atd, _bw_acc, ipc_acc, _off = carry
-        return {"ipc_acc": ipc_acc, "cache_units": units, "bandwidth": bw,
-                "prefetch_on": pf, "active": active}
+        units, bw, pf, active, _woff, _won, _bw_acc, ipc_acc, _off = carry
+        return {k: v.reshape(K, M, n) for k, v in
+                {"ipc_acc": ipc_acc, "cache_units": units, "bandwidth": bw,
+                 "prefetch_on": pf, "active": active}.items()}
 
-    if n_shards > 1:
-        worker = distributed.shard_rows(worker, n_shards)
+    if grid_shards != (1, 1):
+        worker = distributed.shard_grid(worker, grid_shards)
     return jax.jit(worker)
 
 
 def _per_row(value, shape: Tuple[int, ...], dtype) -> np.ndarray:
     """Materialize a scalar-or-per-row tunable at its full batch shape.
 
-    Per-row tunables must carry the leading mix axis explicitly so
-    ``shard_map`` can split them alongside the model state.
+    Per-row tunables must carry the leading (manager, mix) axes explicitly
+    so ``shard_map`` can split them alongside the model state.
     """
     arr = np.asarray(value, dtype=dtype)
-    arr = arr.reshape(arr.shape + (1,) * (len(shape) - arr.ndim))
+    # Scalars and per-mix arrays gain trailing singletons, then broadcast
+    # along the leading manager axis (the tunables are manager-shared).
+    arr = arr.reshape(arr.shape + (1,) * (len(shape) - 1 - arr.ndim))
     return np.ascontiguousarray(np.broadcast_to(arr, shape))
+
+
+def _pad_axis(tree: dict, axis: int, target: int) -> dict:
+    """Right-pad every leaf's ``axis`` to ``target`` rows by replication."""
+    out = {}
+    for key, v in tree.items():
+        cur = v.shape[axis]
+        if cur == target:
+            out[key] = v
+            continue
+        idx = (slice(None),) * axis
+        last = v[idx + (slice(cur - 1, cur),)]
+        reps = np.repeat(last, target - cur, axis=axis)
+        out[key] = np.concatenate([v, reps], axis=axis)
+    return out
+
+
+def run_timelines(
+    apps: Union[AppArrays, dict],
+    specs: Sequence[TimelineSpec],
+    *,
+    total_units: int,
+    total_bandwidth: float,
+    llc_extra_cycles: float = 0.0,
+    min_ways=4,
+    speedup_threshold=1.05,
+    min_bandwidth_allocation=1.0,
+    atd_decay=0.5,
+    bandwidth_delay_decay=0.5,
+    iters: int = FIXED_POINT_ITERS,
+    shard: Optional[bool] = None,
+) -> List[TimelineResult]:
+    """Execute a whole manager set's timelines as ONE device program.
+
+    Args:
+      apps: mix-stacked application profiles, every field ``(M, n)``.
+      specs: one :class:`TimelineSpec` per manager — each keeps its own
+        segment list and Table-3 knob flags; the tables stack along the
+        leading manager axis (see :func:`stack_tables`).
+      min_ways / speedup_threshold / min_bandwidth_allocation / atd_decay /
+        bandwidth_delay_decay: scalars or per-mix arrays (``param_grid``),
+        shared by every manager in the batch — exactly how ``run_sweep``
+        applies one ``CBPParams`` across the Table-3 set.
+      shard: ``None`` auto-shards the (manager, mix) grid over all visible
+        devices (:func:`repro.distributed.grid_shard_counts`, padding both
+        axes as needed); ``False`` forces single-device execution.
+
+    Returns:
+      One :class:`TimelineResult` of host arrays per spec — the only
+      device->host transfer of all K timelines.
+    """
+    if not specs:
+        raise ValueError("need at least one TimelineSpec")
+    params = memsys_jax.app_params(apps)
+    shape = np.asarray(params["cpi_base"]).shape
+    if len(shape) != 2:
+        raise ValueError(f"apps must be mix-stacked (M, n); got {shape}")
+    M, n = shape
+    K = len(specs)
+
+    # Feasibility checks hoisted out of the traced region (the numpy
+    # controllers validate per call; the fused program validates once).
+    if any(s.bandwidth_dynamic for s in specs):
+        check_bandwidth_floor(min_bandwidth_allocation, n, total_bandwidth)
+    if any(s.cache_dynamic for s in specs) and np.any(
+            np.asarray(min_ways, dtype=np.int64) * n > total_units):
+        raise ValueError("min_ways * n exceeds capacity")
+
+    tables = [segment_table(s.schedule) for s in specs]
+    kinds, acc, reconf = stack_tables(
+        tables, [RUN if s.variant == "cppf" else None for s in specs])
+    w_accs = [float(a.sum()) for a in acc]
+
+    grid = {"p_" + k: np.ascontiguousarray(
+        np.broadcast_to(np.asarray(v, np.float64), (K, M, n)))
+        for k, v in params.items()}
+    grid.update(
+        units0=np.stack([np.broadcast_to(
+            np.asarray(s.init_units, dtype=np.int32), (M, n))
+            for s in specs]),
+        bw0=np.stack([np.broadcast_to(
+            np.asarray(s.init_bandwidth, dtype=np.float64), (M, n))
+            for s in specs]),
+        pf0=np.stack([np.broadcast_to(
+            np.asarray(s.init_prefetch, dtype=bool), (M, n))
+            for s in specs]),
+        active0=np.ones((K, M, n), dtype=bool),
+        min_ways=_per_row(min_ways, (K, M), np.int32),
+        speedup_threshold=_per_row(speedup_threshold, (K, M, 1), np.float64),
+        min_bandwidth_allocation=_per_row(
+            min_bandwidth_allocation, (K, M, 1), np.float64),
+        atd_decay=_per_row(atd_decay, (K, M, 1, 1), np.float64),
+        bandwidth_delay_decay=_per_row(
+            bandwidth_delay_decay, (K, M, 1), np.float64),
+    )
+    mgr = {
+        "kinds": kinds,
+        "acc": acc,
+        "reconf": reconf,
+        "cache_dynamic": np.array([s.cache_dynamic for s in specs]),
+        "bandwidth_dynamic": np.array(
+            [s.bandwidth_dynamic for s in specs]),
+        "cache_partitioned": np.array(
+            [s.cache_partitioned for s in specs]),
+        "bandwidth_partitioned": np.array(
+            [s.bandwidth_partitioned for s in specs]),
+        "is_cppf": np.array([s.variant == "cppf" for s in specs]),
+    }
+    replicated = {
+        "total_bandwidth": np.float64(total_bandwidth),
+        "llc_extra_cycles": np.float64(llc_extra_cycles),
+    }
+
+    grid_shards = ((1, 1) if shard is False
+                   else distributed.grid_shard_counts(K, M))
+    k_pad = -(-K // grid_shards[0]) * grid_shards[0]
+    m_pad = -(-M // grid_shards[1]) * grid_shards[1]
+    # Pad with copies of the last manager/mix row; sliced off after the
+    # program (padding rows are duplicates and never feed real rows).
+    grid = _pad_axis(_pad_axis(grid, 1, m_pad), 0, k_pad)
+    mgr = _pad_axis(mgr, 0, k_pad)
+
+    has_sampling = bool(np.isin(kinds, (SAMPLE_OFF, SAMPLE_ON)).any())
+    # The most cache-dynamic managers that ever reallocate on the same
+    # slot — the static bound on mini-greedies per boundary step.
+    cache_dyn_col = np.array([s.cache_dynamic for s in specs])[:, None]
+    max_realloc = int((reconf & cache_dyn_col).sum(axis=0).max(initial=0))
+    fn = _compiled_stacked(
+        has_sampling,
+        any(s.cache_dynamic for s in specs),
+        any(s.bandwidth_dynamic for s in specs),
+        max_realloc, int(total_units), int(iters), grid_shards)
+    record_dispatch()
+    with memsys_jax.x64_context():
+        out = {k: np.asarray(v)[:K, :M]
+               for k, v in fn(grid, mgr, replicated).items()}
+    return [
+        TimelineResult(
+            ipc_acc=out["ipc_acc"][k],
+            w_acc=w_accs[k],
+            cache_units=out["cache_units"][k].astype(np.int64),
+            bandwidth=out["bandwidth"][k],
+            prefetch_on=out["prefetch_on"][k],
+            active=out["active"][k],
+        )
+        for k in range(K)
+    ]
 
 
 def run_timeline(
@@ -290,96 +635,31 @@ def run_timeline(
 ) -> TimelineResult:
     """Execute one manager's whole timeline as ONE device program.
 
-    Args:
-      apps: mix-stacked application profiles, every field ``(M, n)``.
-      schedule: the Fig. 8 segment list (or :func:`cppf_schedule`).
-      variant: ``"fig8"`` (coordinator semantics) or ``"cppf"``.
-      init_units / init_bandwidth / init_prefetch: ``(M, n)`` step-0 state.
-      cache_dynamic / bandwidth_dynamic: whether the boundary controllers
-        fire (static — Table-3 manager modes).
-      min_ways / speedup_threshold / min_bandwidth_allocation / atd_decay /
-        bandwidth_delay_decay: scalars or per-row arrays (``param_grid``).
-      shard: ``None`` auto-shards the mix axis over all visible devices
-        (padding M as needed); ``False`` forces single-device execution.
-
-    Returns:
-      :class:`TimelineResult` of host arrays — the only device->host
-      transfer of the whole timeline.
+    The K=1 case of :func:`run_timelines` — the per-manager fused path the
+    stacked sweep is parity-pinned against.  See ``run_timelines`` for
+    argument semantics.
     """
-    if variant not in ("fig8", "cppf"):
-        raise ValueError(f"unknown timeline variant {variant!r}")
-    params = memsys_jax.app_params(apps)
-    shape = np.asarray(params["cpi_base"]).shape
-    if len(shape) != 2:
-        raise ValueError(f"apps must be mix-stacked (M, n); got {shape}")
-    M, n = shape
-
-    # Feasibility checks hoisted out of the traced region (the numpy
-    # controllers validate per call; the fused program validates once).
-    if bandwidth_dynamic:
-        check_bandwidth_floor(min_bandwidth_allocation, n, total_bandwidth)
-    if cache_dynamic and np.any(
-            np.asarray(min_ways, dtype=np.int64) * n > total_units):
-        raise ValueError("min_ways * n exceeds capacity")
-
-    kinds, durations, reconf = segment_table(schedule)
-    if variant == "cppf":
-        w_acc = float(durations[kinds == RUN].sum())
-    else:
-        w_acc = float(durations.sum())
-
-    sharded = {"p_" + k: np.ascontiguousarray(
-        np.broadcast_to(np.asarray(v, np.float64), (M, n)))
-        for k, v in params.items()}
-    sharded.update(
-        units0=np.asarray(init_units, dtype=np.int32),
-        bw0=np.asarray(init_bandwidth, dtype=np.float64),
-        pf0=np.asarray(init_prefetch, dtype=bool),
-        active0=np.ones((M, n), dtype=bool),
-        atd0=np.zeros((M, n, total_units + 1), dtype=np.float64),
-        bw_acc0=np.zeros((M, n), dtype=np.float64),
-        ipc_acc0=np.zeros((M, n), dtype=np.float64),
-        off_ipc0=np.zeros((M, n), dtype=np.float64),
-        min_ways=_per_row(min_ways, (M,), np.int32),
-        speedup_threshold=_per_row(speedup_threshold, (M, 1), np.float64),
-        min_bandwidth_allocation=_per_row(
-            min_bandwidth_allocation, (M, 1), np.float64),
-        atd_decay=_per_row(atd_decay, (M, 1, 1), np.float64),
-        bandwidth_delay_decay=_per_row(
-            bandwidth_delay_decay, (M, 1), np.float64),
+    spec = TimelineSpec(
+        schedule=schedule,
+        variant=variant,
+        cache_dynamic=bool(cache_dynamic),
+        bandwidth_dynamic=bool(bandwidth_dynamic),
+        cache_partitioned=bool(cache_partitioned),
+        bandwidth_partitioned=bool(bandwidth_partitioned),
+        init_units=init_units,
+        init_bandwidth=init_bandwidth,
+        init_prefetch=init_prefetch,
     )
-    replicated = {
-        "kinds": kinds,
-        "durations": durations,
-        "reconf": reconf,
-        "total_bandwidth": np.float64(total_bandwidth),
-        "llc_extra_cycles": np.float64(llc_extra_cycles),
-    }
-
-    n_shards = 1 if shard is False else distributed.row_shard_count(M)
-    m_pad = -(-M // n_shards) * n_shards
-    if m_pad != M:
-        # Pad with copies of the last row; sliced off after the program.
-        sharded = {
-            k: np.concatenate(
-                [v, np.repeat(v[-1:], m_pad - M, axis=0)], axis=0)
-            for k, v in sharded.items()
-        }
-
-    has_sampling = bool(np.isin(kinds, (SAMPLE_OFF, SAMPLE_ON)).any())
-    fn = _compiled_timeline(
-        variant, bool(cache_dynamic), bool(bandwidth_dynamic),
-        bool(cache_partitioned), bool(bandwidth_partitioned),
-        has_sampling, int(total_units), int(iters), n_shards)
-    record_dispatch()
-    with memsys_jax.x64_context():
-        out = {k: np.asarray(v)[:M] for k, v in fn(sharded,
-                                                   replicated).items()}
-    return TimelineResult(
-        ipc_acc=out["ipc_acc"],
-        w_acc=w_acc,
-        cache_units=out["cache_units"].astype(np.int64),
-        bandwidth=out["bandwidth"],
-        prefetch_on=out["prefetch_on"],
-        active=out["active"],
-    )
+    return run_timelines(
+        apps, [spec],
+        total_units=total_units,
+        total_bandwidth=total_bandwidth,
+        llc_extra_cycles=llc_extra_cycles,
+        min_ways=min_ways,
+        speedup_threshold=speedup_threshold,
+        min_bandwidth_allocation=min_bandwidth_allocation,
+        atd_decay=atd_decay,
+        bandwidth_delay_decay=bandwidth_delay_decay,
+        iters=iters,
+        shard=shard,
+    )[0]

@@ -7,8 +7,10 @@ Contracts under test (see ``src/repro/sim/static_search.py``):
   ``benchmarks.paper_figs._exhaustive_best`` implementation — within
   1e-5 relative weighted speedup, with the SAME argmax/top-k config
   indices under the documented lowest-enumeration-index tie-break;
-* a full search is one device program per family plus one shared
-  baseline evaluation (dispatch counter);
+* a full search is AT MOST TWO device programs — every family's chunked
+  grid scan stacked inside ONE program plus the shared baseline
+  evaluation (dispatch counter), bit-identical per family to the
+  one-program-per-family path (``stack_families=False``);
 * enumerated grids are sum-feasible, padding masks never let a
   masked/infeasible config win, and top-k results are sorted descending
   with distinct indices;
@@ -35,6 +37,7 @@ from repro.sim.static_search import (
     FIG5_FAMILIES,
     FIG5_TWO_RESOURCE,
     FamilySpec,
+    InfeasibleGridError,
     StaticOptions,
     enumerate_grid,
     family_grid,
@@ -79,16 +82,80 @@ def test_batched_matches_exhaustive_best_reference(n_apps, seed):
                 (fam, wi)
 
 
-def test_search_is_one_dispatch_per_family_plus_baseline():
-    """The PR 4 dispatch contract: len(families) search programs plus one
-    shared baseline evaluation — nothing per workload or per config."""
+def test_stacked_search_is_two_device_programs():
+    """The stacked dispatch contract: ONE program scanning every family
+    back to back plus one shared baseline evaluation — nothing per
+    family, workload or config."""
     wls = random_workloads(3, 3, seed=1)
     reset_device_dispatches()
     res = search_static(wls, k=2)
-    assert device_dispatches() == len(FIG5_FAMILIES) + 1
-    assert device_dispatches() <= 2 * len(FIG5_FAMILIES)
+    assert device_dispatches() == 2
     for fam in res.family_names:
         assert np.isfinite(res.best_ws(fam)).all()
+
+
+def test_per_family_path_dispatches_one_program_per_family():
+    """The stacking parity reference keeps the PR 4 shape: len(families)
+    search programs plus the shared baseline evaluation."""
+    wls = random_workloads(3, 3, seed=1)
+    reset_device_dispatches()
+    search_static(wls, k=2, stack_families=False)
+    assert device_dispatches() == len(FIG5_FAMILIES) + 1
+
+
+@pytest.mark.parametrize("n_apps,k,seed", [(2, 1, 3), (3, 4, 5)])
+def test_stacked_bit_identical_to_per_family_path(n_apps, k, seed):
+    """THE family-stacking property: batching the family axis changes
+    nothing — every family's top-k weighted speedups and config indices
+    out of the stacked program equal the per-family programs bit for
+    bit."""
+    wls = random_workloads(4, n_apps, seed=seed)
+    st = search_static(wls, k=k)
+    pf = search_static(wls, k=k, stack_families=False)
+    assert st.family_names == pf.family_names
+    for fam in st.family_names:
+        np.testing.assert_array_equal(st.topk_ws[fam], pf.topk_ws[fam],
+                                      err_msg=fam)
+        np.testing.assert_array_equal(st.topk_index[fam],
+                                      pf.topk_index[fam], err_msg=fam)
+
+
+def test_zero_feasible_configs_raise_descriptive_error():
+    """A grid whose smallest per-resource options overshoot the budget
+    must raise (naming the family and the violated constraint) instead of
+    silently returning -inf scores / -1 indices for downstream argmax to
+    consume."""
+    wls = random_workloads(2, 2, seed=0)
+    opts = StaticOptions(cache_options=(24.0, 32.0),
+                         cache_budget_per_app=16.0)
+    fams = {"cache_only": FamilySpec(manage_cache=True)}
+    with pytest.raises(InfeasibleGridError) as exc:
+        search_static(wls, families=fams, options=opts)
+    msg = str(exc.value)
+    assert "cache_only" in msg and "cache" in msg and "budget" in msg
+    # the numpy backend validates identically
+    with pytest.raises(InfeasibleGridError):
+        search_static(wls, families=fams, options=opts, backend="numpy")
+    # an unmanaged resource pinned above its budget trips the same guard
+    with pytest.raises(InfeasibleGridError, match="bandwidth"):
+        search_static(
+            wls, families={"c": FamilySpec(manage_cache=True)},
+            options=StaticOptions(bw_fixed=40.0, bw_budget_per_app=4.0))
+    assert issubclass(InfeasibleGridError, ValueError)
+
+
+def test_empty_topk_slot_index_refuses_config_lookup():
+    """Index -1 (k beyond the feasible count) must not silently wrap to
+    the last grid row when asked for its allocation."""
+    wls = random_workloads(2, 2, seed=1)
+    fams = {"equal_on": FIG5_FAMILIES["equal_on"]}  # 1 feasible config
+    res = search_static(wls, families=fams, k=3)
+    assert (res.topk_index["equal_on"][:, 1:] == -1).all()
+    with pytest.raises(IndexError, match="top-k slot"):
+        res.grids["equal_on"].config(res.topk_index["equal_on"])
+    # valid indices keep working
+    cfg = res.best_config("equal_on")
+    assert cfg["cache_units"].shape == (2, 2)
 
 
 def test_all3_dominates_every_subset_per_workload():

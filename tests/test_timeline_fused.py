@@ -1,17 +1,23 @@
-"""The fused Fig. 8 timeline (PR 3): parity, dispatch contract, sharding.
+"""The fused/stacked Fig. 8 timelines: parity, dispatch contract, sharding.
 
 Contracts under test (see ``src/repro/sim/timeline_jax.py``):
 
+* stacked trajectories (every manager in ONE device program, the default)
+  are BIT-IDENTICAL to the per-manager fused path
+  (``CMPConfig(timeline_backend="fused")``) for every Table-3 manager, on
+  1 and 8 forced host devices;
 * fused trajectories match the PR 2 segment-loop path — identical integer
   and boolean controller decisions, float results to well within the 1e-5
   model tolerance;
-* a full ``run_sweep`` is ONE device program per (manager, timeline) plus
-  a single baseline evaluation (dispatch counter), with zero host
-  allocator calls;
+* a full ``run_sweep`` is AT MOST TWO device programs: the stacked
+  manager set plus the shared baseline evaluation (dispatch counter),
+  with zero host allocator calls;
 * the ``CBPParams`` decay constants default to the paper's 0.5 and sweep
   through ``param_grid``;
 * capacity invariants raise real exceptions (not ``assert``);
-* the mix axis shards across forced host devices with identical results.
+* the (manager, mix) grid shards across forced host devices via
+  ``repro.distributed.shard_grid`` with bit-identical results, and shard
+  counts clamp to the axis extents (padding never exceeds real rows).
 """
 import json
 import os
@@ -57,18 +63,51 @@ def test_fused_matches_segment_loop_all_managers():
                                    rtol=1e-12, err_msg=name)
 
 
-def test_fused_sweep_is_one_program_per_manager_timeline():
-    """The PR 3 dispatch contract: len(managers) timeline programs plus
-    one baseline evaluation — nothing per segment, nothing per mix."""
+def test_stacked_sweep_is_two_device_programs():
+    """The stacked dispatch contract: ONE program for the whole manager
+    set plus one baseline evaluation — nothing per manager, segment or
+    mix."""
     mixes = random_mixes(3, 16, seed=9)
     names = ["baseline", "only cache", "bw+pref", "CPpf", "CBP"]
     before_alloc = allocator_calls()
     reset_device_dispatches()
     res = run_sweep(mixes, managers=names, total_ms=20.0)
-    assert device_dispatches() == len(names) + 1
+    assert device_dispatches() == 2
     assert allocator_calls() == before_alloc
     for name in names:
         assert np.isfinite(res.ipc[name]).all()
+
+
+def test_per_manager_fused_path_dispatches_one_program_each():
+    """The stacking parity reference keeps the PR 3 shape: one program
+    per (manager, timeline) plus the baseline evaluation."""
+    mixes = random_mixes(2, 16, seed=9)
+    names = ["only cache", "CPpf", "CBP"]
+    reset_device_dispatches()
+    run_sweep(mixes, managers=names, total_ms=20.0,
+              config=CMPConfig(timeline_backend="fused"))
+    assert device_dispatches() == len(names) + 1
+
+
+def test_stacked_bit_identical_to_per_manager_fused_every_manager():
+    """THE stacking property: batching the manager axis changes nothing.
+    Every Table-3 manager's per-mix IPC and final allocation out of the
+    stacked program equal the per-manager fused run bit for bit."""
+    mixes = [WORKLOADS["w1"], WORKLOADS["w2"]] + random_mixes(1, 16, seed=5)
+    stacked = run_sweep(mixes, total_ms=40.0)
+    fused = run_sweep(mixes, total_ms=40.0,
+                      config=CMPConfig(timeline_backend="fused"))
+    np.testing.assert_array_equal(stacked.baseline_ipc, fused.baseline_ipc)
+    for name in MANAGER_NAMES:
+        np.testing.assert_array_equal(stacked.ipc[name], fused.ipc[name],
+                                      err_msg=name)
+        sa, fa = stacked.final_alloc[name], fused.final_alloc[name]
+        np.testing.assert_array_equal(sa.cache_units, fa.cache_units,
+                                      err_msg=name)
+        np.testing.assert_array_equal(sa.prefetch_on, fa.prefetch_on,
+                                      err_msg=name)
+        np.testing.assert_array_equal(sa.bandwidth, fa.bandwidth,
+                                      err_msg=name)
 
 
 def test_segment_loop_dispatches_per_segment():
@@ -115,38 +154,85 @@ _SHARD_SCRIPT = """
 import json, sys
 import numpy as np
 import jax
-from repro.sim import WORKLOADS, run_sweep
+from repro import distributed
+from repro.sim import MANAGER_NAMES, WORKLOADS, run_sweep
 assert jax.device_count() == 8, jax.device_count()
-res = run_sweep([WORKLOADS["w1"], WORKLOADS["w2"]], managers=["CBP"],
-                total_ms=20.0)
-json.dump({"ipc": np.asarray(res.ipc["CBP"]).tolist(),
-           "units": np.asarray(
-               res.final_alloc["CBP"].cache_units).tolist()},
-          sys.stdout)
+# 11 managers x 2 mixes on 8 forced devices factor into a genuine 2-D
+# (manager, mix) mesh — the manager axis is really being split here.
+assert distributed.grid_shard_counts(len(MANAGER_NAMES), 2) == (4, 2)
+res = run_sweep([WORKLOADS["w1"], WORKLOADS["w2"]], total_ms=20.0)
+json.dump({name: {"ipc": np.asarray(res.ipc[name]).tolist(),
+                  "units": np.asarray(
+                      res.final_alloc[name].cache_units).tolist()}
+           for name in MANAGER_NAMES}, sys.stdout)
 """
 
 
-def test_mix_axis_shards_across_forced_host_devices():
-    """The same sweep on 8 forced host devices (mix axis sharded via
-    repro.distributed.shard_map, padded 2 -> 8) matches the single-device
-    run to float64 round-off."""
+def _forced_device_env(n: int = 8) -> dict:
     env = dict(os.environ)
     flags = env.get("XLA_FLAGS", "")
     if "--xla_force_host_platform_device_count" not in flags:
-        flags += " --xla_force_host_platform_device_count=8"
+        flags += f" --xla_force_host_platform_device_count={n}"
     env["XLA_FLAGS"] = flags.strip()
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = (os.path.join(repo, "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
+    return env
+
+
+def test_manager_mix_grid_shards_across_forced_host_devices():
+    """The same stacked sweep on 8 forced host devices — the (manager,
+    mix) grid sharded over a (4, 2) mesh via repro.distributed.shard_grid,
+    managers padded 11 -> 12 — is BIT-IDENTICAL to the single-device run
+    for every Table-3 manager."""
     proc = subprocess.run(
-        [sys.executable, "-c", _SHARD_SCRIPT], env=env,
+        [sys.executable, "-c", _SHARD_SCRIPT], env=_forced_device_env(),
         capture_output=True, text=True, timeout=540)
     assert proc.returncode == 0, proc.stderr[-2000:]
     sharded = json.loads(proc.stdout)
 
-    ref = run_sweep([WORKLOADS["w1"], WORKLOADS["w2"]], managers=["CBP"],
-                    total_ms=20.0)
-    np.testing.assert_allclose(
-        np.asarray(sharded["ipc"]), ref.ipc["CBP"], rtol=1e-12, atol=1e-12)
-    np.testing.assert_array_equal(
-        np.asarray(sharded["units"]), ref.final_alloc["CBP"].cache_units)
+    ref = run_sweep([WORKLOADS["w1"], WORKLOADS["w2"]], total_ms=20.0)
+    for name in MANAGER_NAMES:
+        np.testing.assert_array_equal(
+            np.asarray(sharded[name]["ipc"]), ref.ipc[name], err_msg=name)
+        np.testing.assert_array_equal(
+            np.asarray(sharded[name]["units"]),
+            ref.final_alloc[name].cache_units, err_msg=name)
+
+
+_CLAMP_SCRIPT = """
+import jax
+from repro import distributed
+assert jax.device_count() == 8, jax.device_count()
+# row shards clamp to the row count: 3 mixes never shard 8 ways.
+assert distributed.row_shard_count(3) == 3
+assert distributed.row_shard_count(100) == 8
+assert distributed.row_shard_count(0) == 1
+# padding never exceeds the real rows for any clamped shard count.
+for n_rows in range(1, 33):
+    s = distributed.row_shard_count(n_rows)
+    pad = -(-n_rows // s) * s - n_rows
+    assert s <= n_rows and pad < n_rows, (n_rows, s, pad)
+# grid counts clamp per axis and never exceed the device count.
+assert distributed.grid_shard_counts(1, 3) == (1, 3)
+assert distributed.grid_shard_counts(2, 2) == (2, 2)
+a, b = distributed.grid_shard_counts(11, 32)
+assert a * b <= 8 and a <= 11 and b <= 32 and (a, b) == (2, 4)
+import numpy as np
+from repro.sim import run_sweep, random_mixes
+res = run_sweep(random_mixes(3, 16, seed=2), managers=["CBP"],
+                total_ms=20.0)
+assert np.isfinite(np.asarray(res.ipc["CBP"])).all()
+print("OK")
+"""
+
+
+def test_row_shard_count_clamps_to_rows_on_forced_devices():
+    """Regression: 8 forced devices + 3 mixes used to build 8 shards and
+    pad 3 rows to 8 (more padding than data); shard counts now clamp to
+    the axis extent and the padded row count stays below the real one."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _CLAMP_SCRIPT], env=_forced_device_env(),
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
