@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timer
+from repro.core.cache_controller import lookahead_allocate
 from repro.kernels.cbp_matmul.kernel import cbp_matmul, vmem_footprint_bytes
 from repro.kernels.flash_attention.kernel import flash_attention_fwd
 from repro.kernels.flash_attention.ref import attention_ref
@@ -79,6 +80,39 @@ def ssd_scan_bench() -> None:
             rows[f"chunk{chunk}"] = {"max_err": f"{err:.1e}",
                                      "flops_per_tok_intra": intra}
     emit("kernel_ssd_scan", t.seconds, rows)
+
+
+def lookahead_bench() -> None:
+    """Lookahead boundary-refresh backends: the interpreted Pallas greedy
+    kernel vs the batched incremental-refresh while_loop, both pinned
+    bit-identical to the host numpy golden (the real correctness gate is
+    ``tests/test_lookahead_kernel.py``; this records the wall-time shape).
+    """
+    from repro.core import cache_controller_jax as ccj
+
+    rng = np.random.default_rng(7)
+    B, n, U = 32, 16, 64
+    u = np.arange(U + 1, dtype=np.float64)
+    scales = rng.uniform(0.0, 50.0, size=(B, n))
+    rates = rng.uniform(2.0, 40.0, size=(B, n))
+    curves = scales[..., None] * (1.0 - np.exp(-u / rates[..., None]))
+    golden = np.stack([lookahead_allocate(curves[b], U, 1)
+                       for b in range(B)])
+    rows = {}
+    with timer() as t:
+        for backend in ("pallas", "jax"):
+            t0 = time.monotonic()
+            out = np.asarray(ccj.lookahead_allocate(
+                curves, U, 1, backend=backend))
+            cold_ms = 1e3 * (time.monotonic() - t0)
+            t0 = time.monotonic()
+            ccj.lookahead_allocate(curves, U, 1, backend=backend)
+            rows[backend] = {
+                "cold_ms": round(cold_ms),
+                "warm_ms": round(1e3 * (time.monotonic() - t0), 2),
+                "bit_identical": bool((out == golden).all()),
+            }
+    emit("kernel_lookahead", t.seconds, rows)
 
 
 def cbp_matmul_knob_sweep() -> None:

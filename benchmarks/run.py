@@ -43,6 +43,7 @@ def main() -> None:
         "kernel_flash_decode": kernel_bench.flash_decode_bench,
         "kernel_ssd_scan": kernel_bench.ssd_scan_bench,
         "kernel_cbp_matmul": kernel_bench.cbp_matmul_knob_sweep,
+        "kernel_lookahead": kernel_bench.lookahead_bench,
         "roofline": roofline_report.roofline_report,
     }
     selected = {name: fn for name, fn in benches.items()

@@ -20,15 +20,18 @@ machine variance) fails the smoke.  The refreshed record keeps any prior
 ``--compare-host`` / ``--compare-segment`` fields, so plain CI runs don't
 clobber the recorded comparison evidence.
 
-``--compare-segment`` additionally times the same sweep over the PR 2
-per-segment host loop (``CMPConfig(timeline_backend="segment")``) and
-records the fused-timeline speedup.  ``--compare-host`` times the PR 1
-configuration (segment loop + host numpy allocator).  CI skips both to
-stay inside its wall-time budget; run them locally when touching the
+``--compare-fused`` additionally times the per-manager fused path
+(``CMPConfig(timeline_backend="fused")``, one program per manager) and
+FAILS if the stacked program is slower — the frozen-row-skipping gate.
+``--compare-segment`` times the PR 2 per-segment host loop
+(``CMPConfig(timeline_backend="segment")``) and records the
+fused-timeline speedup.  ``--compare-host`` times the PR 1 configuration
+(segment loop + host numpy allocator).  CI skips all three to stay
+inside its wall-time budget; run them locally when touching the
 timeline or the allocator.
 
     PYTHONPATH=src python -m benchmarks.sweep_smoke \\
-        [--compare-segment] [--compare-host]
+        [--compare-fused] [--compare-segment] [--compare-host]
 
 With ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` the same
 smoke exercises the multi-device path: the stacked program shards its
@@ -59,6 +62,7 @@ DEFAULT_TOTAL_MS = 100.0
 HOST_FIELDS = ("host_allocator_calls_host_path", "wall_s_host_alloc",
                "allocator_speedup_warm")
 SEGMENT_FIELDS = ("wall_s_segment_timeline", "fused_timeline_speedup_warm")
+FUSED_FIELDS = ("wall_s_fused_timeline", "stacked_vs_fused_warm")
 
 
 def _prior_record() -> dict:
@@ -72,7 +76,8 @@ def _prior_record() -> dict:
 
 
 def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
-         compare_host: bool = False, compare_segment: bool = False) -> None:
+         compare_host: bool = False, compare_segment: bool = False,
+         compare_fused: bool = False) -> None:
     prior = _prior_record()
     mixes = random_mixes(n_mixes, 16, seed=1)
 
@@ -119,6 +124,34 @@ def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
         "wall_s_device_alloc_cold": round(wall_cold, 3),
         "cbp_geomean_ws": summary["CBP"],
     }
+    if compare_fused:
+        # Frozen-row-skipping gate: the single stacked program must not be
+        # slower than the per-manager fused programs it replaced (those
+        # get XLA's inter-program overlap for free; the stacked path has
+        # to earn the tie through bucketed short scans + the unrolled
+        # boundary greedy).
+        cfg = CMPConfig(timeline_backend="fused")
+        run_sweep(mixes, total_ms=total_ms, config=cfg)  # warm its jits
+        wall_fused = float("inf")
+        for _ in range(6):
+            t0 = time.monotonic()
+            run_sweep(mixes, total_ms=total_ms, config=cfg)
+            wall_fused = min(wall_fused, time.monotonic() - t0)
+            t0 = time.monotonic()
+            run_sweep(mixes, total_ms=total_ms)
+            wall_warm = min(wall_warm, time.monotonic() - t0)
+        derived.update({
+            "wall_s_fused_timeline": round(wall_fused, 3),
+            "stacked_vs_fused_warm": round(
+                wall_warm / max(wall_fused, 1e-9), 3),
+        })
+        derived["wall_s_device_alloc_warm"] = round(wall_warm, 3)
+        if wall_warm > wall_fused:
+            raise RuntimeError(
+                f"stacked sweep slower than per-manager fused: "
+                f"{wall_warm:.3f}s vs {wall_fused:.3f}s")
+    else:
+        derived.update({k: prior[k] for k in FUSED_FIELDS if k in prior})
     if compare_segment:
         cfg = CMPConfig(timeline_backend="segment")
         run_sweep(mixes, total_ms=total_ms, config=cfg)  # warm its jits
@@ -173,5 +206,7 @@ if __name__ == "__main__":
     ap.add_argument("--total-ms", type=float, default=DEFAULT_TOTAL_MS)
     ap.add_argument("--compare-host", action="store_true")
     ap.add_argument("--compare-segment", action="store_true")
+    ap.add_argument("--compare-fused", action="store_true")
     args = ap.parse_args()
-    main(args.mixes, args.total_ms, args.compare_host, args.compare_segment)
+    main(args.mixes, args.total_ms, args.compare_host, args.compare_segment,
+         args.compare_fused)

@@ -164,19 +164,22 @@ def cppf_allocate(
 
 
 class CacheController:
-    """Backend-dispatched Lookahead allocator (numpy reference | JAX batched).
+    """Backend-dispatched Lookahead allocator (numpy | JAX | Pallas).
 
     ``allocate`` accepts utility curves with arbitrary leading batch axes
     ``(..., n, total_units + 1)`` and returns ``(..., n)`` integer
     allocations.  The numpy backend loops the golden-reference greedy over
     the batch on the host; the JAX backend runs the whole batch as one
     jitted device call (:mod:`repro.core.cache_controller_jax`), which is
-    what keeps full sweeps device-resident.
+    what keeps full sweeps device-resident; the Pallas backend swaps the
+    batched while_loop for the per-row VMEM-resident kernel
+    (:mod:`repro.kernels.lookahead_greedy`, interpret mode off-TPU) behind
+    the same entry points.
     """
 
     def __init__(self, total_units: int, min_units: int = 4,
                  backend: str = "numpy"):
-        if backend not in ("numpy", "jax"):
+        if backend not in ("numpy", "jax", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         self.total_units = total_units
         self.min_units = min_units
@@ -198,10 +201,10 @@ class CacheController:
         curves = np.asarray(utility_curves, dtype=np.float64)
         batch_shape = curves.shape[:-2]
         mus = self._min_units_array(min_units, batch_shape)
-        if self.backend == "jax":
+        if self.backend in ("jax", "pallas"):
             from repro.core import cache_controller_jax
             return np.asarray(cache_controller_jax.lookahead_allocate(
-                curves, self.total_units, mus))
+                curves, self.total_units, mus, backend=self.backend))
         if curves.ndim == 2:
             return lookahead_allocate(curves, self.total_units, int(mus))
         out = np.empty(curves.shape[:-1], dtype=np.int64)
@@ -222,10 +225,11 @@ class CacheController:
         active = np.asarray(active, dtype=bool)
         batch_shape = curves.shape[:-2]
         mus = self._min_units_array(min_units, batch_shape)
-        if self.backend == "jax":
+        if self.backend in ("jax", "pallas"):
             from repro.core import cache_controller_jax
             return np.asarray(cache_controller_jax.lookahead_allocate_masked(
-                curves, self.total_units, mus, active))
+                curves, self.total_units, mus, active,
+                backend=self.backend))
         if curves.ndim == 2:
             return cppf_allocate(curves, self.total_units, int(mus), active)
         out = np.empty(curves.shape[:-1], dtype=np.int64)

@@ -56,8 +56,19 @@ def _x64_context():
     return _enable_x64()
 
 
+def _resolve_backend(backend):
+    """``None`` -> the platform default: the Pallas kernel where it lowers
+    natively (TPU), the batched while_loop elsewhere (interpret-mode Pallas
+    on CPU is a correctness harness, not a fast path)."""
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "jax"
+    if backend not in ("jax", "pallas"):
+        raise ValueError(f"unknown lookahead backend {backend!r}")
+    return backend
+
+
 @functools.partial(jax.jit, static_argnames=("total_units",))
-def _greedy_core(
+def _greedy_loop(
     curves: jnp.ndarray,     # (B, n, U + 1) float64
     min_units: jnp.ndarray,  # (B,) int
     active: jnp.ndarray,     # (B, n) bool
@@ -75,13 +86,21 @@ def _greedy_core(
     cache, then each trip refreshes at most ONE stale client per batch
     element with ``(B, U)``-sized work — ~n-fold less memory traffic per
     trip, which is what the CPU while_loop is bound by — and rows with a
-    fully valid cache take their greedy step in the same trip.
+    fully valid cache take their greedy step in the same trip.  (A
+    full-``(B, n, U)``-recompute-per-trip variant — the Pallas kernel's
+    recurrence, ``U + 2`` bound — was measured 7-15x SLOWER here: the
+    per-trip ``(B, n, U)`` gathers cost far more than the extra trips.)
 
     A batch element whose best mu goes non-positive is *stuck*: its
     allocation no longer changes, so its mus can't either — the loop
     retires it and the reference's zero-utility spread (distribute the
     whole balance by remaining potential gain) is applied ONCE, after the
     loop, to every retired element.
+
+    Returns ``(alloc, balance, stuck, it)`` — the greedy allocation, the
+    undistributed balance for :func:`_zero_spread`, the per-row stuck
+    flags, and the body-application count (two per while trip), which the
+    trip-bound regression test audits.
     """
     B, n, _ = curves.shape
     U = total_units
@@ -160,19 +179,27 @@ def _greedy_core(
         stuck = stuck | (ready & ~(mu_sel > 0.0))
         return alloc, balance, stuck, mu_c, k_c, dirty, it + 1
 
-    def body_pair(state):
-        # Two body applications per while trip: once a row is finished
-        # (balance exhausted or stuck) body is a no-op for it, so pairing
-        # preserves the exact greedy trajectory while halving the loop's
-        # per-trip overhead on CPU (the trips are tiny-op bound).
-        return body(body(state))
+    def body_quad(state):
+        # Four body applications per while trip: once a row is finished
+        # (balance exhausted or stuck) body is a no-op for it, so the
+        # unroll preserves the exact greedy trajectory while quartering
+        # the loop's per-trip overhead on CPU (the trips are tiny-op
+        # bound — cond + carry rotation cost as much as the body).
+        return body(body(body(body(state))))
 
-    alloc, balance, _stuck, _mu, _k, _dirty, _it = jax.lax.while_loop(
-        cond, body_pair,
-        (alloc0, balance0, stuck0, mu_c0, k_c0, dirty0, jnp.int32(0)))
+    alloc, balance, stuck, it = (lambda s: (s[0], s[1], s[2], s[6]))(
+        jax.lax.while_loop(
+            cond, body_quad,
+            (alloc0, balance0, stuck0, mu_c0, k_c0, dirty0, jnp.int32(0))))
+    return alloc, balance, stuck, it
 
-    # ---- zero-utility spread (reference's even-spread branch) -------- #
-    # Runs once, outside the loop, for elements retired with balance left.
+
+def _zero_spread(curves, alloc, balance, active, remaining):
+    """The reference's even-spread branch: distribute the undistributed
+    balance by remaining potential gain (stable order).  Runs once, outside
+    the greedy loop, for elements retired with balance left — shared by the
+    while_loop and Pallas backends."""
+    B, n, _ = curves.shape
     cur = jnp.take_along_axis(curves, alloc[:, :, None], -1)[:, :, 0]
     top = jnp.take_along_axis(
         curves, jnp.broadcast_to(remaining[:, None, None], (B, n, 1)),
@@ -188,7 +215,29 @@ def _greedy_core(
     return alloc
 
 
-def lookahead_traced(curves, min_units, total_units: int):
+def _greedy_core(curves, min_units, active, remaining, total_units: int,
+                 backend=None):
+    """Backend-dispatched greedy + shared spread.
+
+    ``backend="jax"`` runs the batched incremental-refresh while_loop;
+    ``backend="pallas"`` runs the per-row VMEM-resident kernel
+    (:mod:`repro.kernels.lookahead_greedy`).  Both feed the same
+    :func:`_zero_spread`, so they are interchangeable bit for bit.
+    """
+    backend = _resolve_backend(backend)
+    if backend == "pallas":
+        from repro.kernels.lookahead_greedy import ops as _lookahead_ops
+        alloc, balance = _lookahead_ops.lookahead_greedy(
+            curves, min_units, active.astype(jnp.int32),
+            remaining, total_units=total_units)
+    else:
+        alloc, balance, _stuck, _it = _greedy_loop(
+            curves, min_units, active, remaining,
+            total_units=total_units)
+    return _zero_spread(curves, alloc, balance, active, remaining)
+
+
+def lookahead_traced(curves, min_units, total_units: int, backend=None):
     """Traced Lookahead over ``(B, n, U+1)`` curves -> ``(B, n)`` int32.
 
     For use *inside* jitted programs (the fused Fig. 8 timeline scans over
@@ -201,10 +250,11 @@ def lookahead_traced(curves, min_units, total_units: int):
     return _greedy_core(
         curves, min_units, jnp.ones((B, n), dtype=bool),
         jnp.full((B,), total_units, dtype=jnp.int32),
-        total_units=total_units)
+        total_units=total_units, backend=backend)
 
 
-def lookahead_masked_traced(curves, min_units, active, total_units: int):
+def lookahead_masked_traced(curves, min_units, active, total_units: int,
+                            backend=None):
     """Traced CPpf allocation (:func:`lookahead_allocate_masked` inside jit).
 
     Pins inactive clients at the floor and runs the greedy over the active
@@ -217,7 +267,7 @@ def lookahead_masked_traced(curves, min_units, active, total_units: int):
     remaining = (total_units
                  - min32 * (n - active.sum(axis=-1).astype(jnp.int32)))
     out = _greedy_core(curves, min_units, active, remaining,
-                       total_units=total_units)
+                       total_units=total_units, backend=backend)
     none_active = ~active.any(axis=-1)
     extra = total_units - n * min32
     even = (min32[:, None] + extra[:, None] // n
@@ -251,6 +301,7 @@ def lookahead_allocate(
     utility_curves,
     total_units: int,
     min_units=4,
+    backend=None,
 ) -> np.ndarray:
     """Batched Lookahead: ``(..., n, U+1)`` curves -> ``(..., n)`` ints.
 
@@ -270,7 +321,7 @@ def lookahead_allocate(
             jnp.asarray(mus),
             jnp.ones((B, n), dtype=bool),
             jnp.full((B,), total_units, dtype=jnp.int64),
-            total_units=int(total_units))
+            total_units=int(total_units), backend=backend)
         out = np.asarray(out)
     assert (out.sum(axis=-1) == total_units).all()
     return out.reshape(batch_shape + (n,)).astype(np.int64)
@@ -281,6 +332,7 @@ def lookahead_allocate_masked(
     total_units: int,
     min_units,
     active,
+    backend=None,
 ) -> np.ndarray:
     """Batched CPpf allocation: pin inactive clients at the floor, UCP over
     the active subset (bit-parity with
@@ -305,7 +357,7 @@ def lookahead_allocate_masked(
             jnp.asarray(mus),
             jnp.asarray(act),
             jnp.asarray(remaining),
-            total_units=int(total_units))
+            total_units=int(total_units), backend=backend)
         out = np.asarray(out)
     none_active = ~act.any(axis=-1)
     if none_active.any():

@@ -1,0 +1,137 @@
+"""UCP Lookahead greedy — Pallas kernel over a batch of utility curves.
+
+One grid step per batch row: the row's ``(n, U+1)`` utility curve loads
+into VMEM ONCE and the whole greedy while-loop runs against that resident
+tile, instead of the batched ``lax.while_loop`` path re-streaming the full
+``(B, n, U+1)`` grid from HBM on every trip
+(:func:`repro.core.cache_controller_jax._greedy_loop` — the dominant term
+of a stacked sweep's boundary refresh after PR 5).
+
+Inside the kernel each trip recomputes every client's best ``(mu, k)``
+step from the resident curve — a ``(n, U)`` masked argmax, exactly the
+reference recurrence — then takes one greedy step.  Because each trip
+either allocates >= 1 unit or retires the row, the trip bound is just
+``U + 1`` (the batched path needs ``(n + 2) * U`` because it refreshes one
+stale client per trip).  Tie-breaks are the repo-wide contract: ``argmax``
+picks the first max, so the smallest step wins within a client and the
+lowest client index wins across clients.
+
+The zero-utility spread (a stable argsort, which Mosaic has no primitive
+for) deliberately stays OUTSIDE the kernel: the kernel returns the greedy
+allocation plus the undistributed balance, and the caller applies
+:func:`repro.core.cache_controller_jax._zero_spread` — the same
+greedy/spread split as ``ref.py``.
+
+Validated in interpret mode off-TPU (``tests/test_lookahead_kernel.py``
+pins it bit-identical to the numpy golden, incl. the masked CPpf variant).
+Real-TPU lowering caveats, documented rather than hidden: the curves are
+float64 (the bit-parity contract with the numpy golden is written in f64)
+and the per-client gain gather (``take_along_axis`` on the resident tile)
+would need a one-hot contraction on Mosaic; both are fine in interpret
+mode, which is the contract this repo tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lookahead_kernel(min_ref, rem_ref, curves_ref, active_ref,
+                      alloc_ref, bal_ref, *, n: int, total_units: int):
+    U = total_units
+    curve = curves_ref[0]                              # (n, U+1) resident
+    act_col = (active_ref[...] != 0).reshape(n, 1)
+    min_u = min_ref[0, 0]
+    rem = rem_ref[0, 0]
+
+    ks = jax.lax.broadcasted_iota(jnp.int32, (n, U), 1) + 1
+    ksf = ks.astype(curve.dtype)
+    neg_inf = jnp.array(-jnp.inf, curve.dtype)
+    iota_col = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0)
+
+    def cond(state):
+        _alloc, balance, stuck, it = state
+        # Each trip allocates >= 1 unit or sets stuck -> <= U + 1 trips.
+        return (it <= U) & (balance > 0) & ~stuck
+
+    def body(state):
+        alloc, balance, stuck, it = state              # alloc (n, 1) int32
+        cap = jnp.minimum(balance, rem - alloc)
+        cap = jnp.where(act_col, cap, 0)               # (n, 1)
+        # Full best-step recompute against the VMEM-resident curve.
+        idx = jnp.minimum(alloc + ks, U)               # (n, U)
+        base = jnp.take_along_axis(curve, alloc, axis=1)
+        gain = jnp.take_along_axis(curve, idx, axis=1) - base
+        mus = jnp.where(ks <= cap, gain / ksf, neg_inf)
+        k_best = jnp.argmax(mus, axis=1).astype(jnp.int32)[:, None] + 1
+        mu_best = jnp.max(mus, axis=1)[:, None]        # (n, 1)
+        # First max across clients -> lowest index wins ties.
+        i_best = jnp.argmax(mu_best[:, 0]).astype(jnp.int32)
+        mu_sel = jnp.max(mu_best)
+        do_step = mu_sel > 0.0
+        at_i = (iota_col == i_best) & do_step
+        k_sel = jnp.sum(jnp.where(at_i, k_best, 0), dtype=jnp.int32)
+        alloc = alloc + jnp.where(at_i, k_best, 0)
+        balance = balance - k_sel
+        stuck = ~do_step
+        return alloc, balance, stuck, it + 1
+
+    alloc0 = jnp.full((n, 1), min_u, dtype=jnp.int32)
+    balance0 = jnp.int32(U) - jnp.int32(n) * min_u
+    alloc, balance, _stuck, _it = jax.lax.while_loop(
+        cond, body, (alloc0, balance0, jnp.bool_(False), jnp.int32(0)))
+    alloc_ref[...] = alloc.reshape(1, n)
+    bal_ref[0, 0] = balance
+
+
+def lookahead_greedy_rows(
+    curves: jnp.ndarray,     # (B, n, U + 1) float64
+    min_units: jnp.ndarray,  # (B,) int — per-row floor
+    active: jnp.ndarray,     # (B, n) bool — CPpf competing mask
+    remaining: jnp.ndarray,  # (B,) int — top usable curve column
+    *,
+    total_units: int,
+    interpret: bool = False,
+) -> tuple:
+    """Run the greedy kernel over a batch: one grid step per row.
+
+    Returns ``(alloc, balance)`` — ``(B, n)`` int32 allocations (floors
+    applied, greedy distributed) and the ``(B,)`` int32 undistributed
+    balance for the caller's zero-utility spread.
+    """
+    B, n, U1 = curves.shape
+    if U1 != total_units + 1:
+        raise ValueError(f"curves must have {total_units + 1} columns")
+    min2 = min_units.astype(jnp.int32).reshape(B, 1)
+    rem2 = remaining.astype(jnp.int32).reshape(B, 1)
+    act32 = active.astype(jnp.int32)
+
+    kernel = functools.partial(_lookahead_kernel, n=n,
+                               total_units=total_units)
+    alloc, balance = pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            # Per-row scalars live in SMEM (scalars are 2-D on TPU).
+            pl.BlockSpec((1, 1), lambda b: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1), lambda b: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, n, U1), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, n), lambda b: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, n), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(min2, rem2, curves, act32)
+    return alloc, balance[:, 0]

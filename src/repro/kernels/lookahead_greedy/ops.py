@@ -1,0 +1,39 @@
+"""Jitted public wrapper for the Lookahead greedy kernel.
+
+Selects interpret mode automatically off-TPU, mirroring the
+flash_attention ops layer: the container validates the kernel body on CPU
+(where the f64 bit-parity contract with the numpy golden is enforced);
+real deployments lower it to Mosaic.
+
+The wrapper returns the *greedy* result — ``(alloc, balance)`` — and the
+dispatcher in :mod:`repro.core.cache_controller_jax` applies the shared
+zero-utility spread, so ``backend="pallas"`` and ``backend="jax"`` differ
+only in how the while-loop itself executes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.lookahead_greedy.kernel import lookahead_greedy_rows
+from repro.kernels.lookahead_greedy.ref import (
+    lookahead_masked_ref,
+    lookahead_ref,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("total_units",))
+def lookahead_greedy(curves, min_units, active, remaining, *,
+                     total_units: int):
+    """(B, n, U+1) curves -> ((B, n) greedy alloc, (B,) leftover balance)."""
+    return lookahead_greedy_rows(
+        curves, min_units, active, remaining,
+        total_units=total_units, interpret=not _on_tpu())
+
+
+__all__ = ["lookahead_greedy", "lookahead_ref", "lookahead_masked_ref"]

@@ -1,0 +1,121 @@
+"""Numpy oracle for the Lookahead greedy Pallas kernel.
+
+Independent re-derivation of UCP Lookahead (Qureshi & Patt, MICRO 2006 —
+paper §3.2.1) used to validate ``kernel.py``.  It is *pinned bit-identical*
+to the repo's golden reference
+(:func:`repro.core.cache_controller.lookahead_allocate`, incl. the masked
+CPpf variant :func:`repro.core.cache_controller.cppf_allocate`) by
+``tests/test_lookahead_kernel.py`` — same deterministic tie-breaks:
+
+* among clients with equal best marginal utility, the lowest index wins;
+* within a client, the smallest step ``k`` achieving the best mu wins;
+* the zero-utility spread orders clients by remaining potential gain with a
+  stable sort.
+
+Unlike the golden it mirrors the *kernel's* decomposition: the greedy loop
+stops at the first non-positive best mu and returns the leftover balance,
+and the spread runs as a separate step — the same split the Pallas kernel
+and :func:`repro.core.cache_controller_jax._zero_spread` use.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def greedy_ref(
+    curves: np.ndarray,
+    min_units: int,
+    active: np.ndarray,
+    remaining: int,
+    total_units: int,
+) -> tuple:
+    """The bounded greedy alone: (n, U+1) curve -> ((n,) alloc, balance).
+
+    ``remaining`` is the top usable curve column (``total_units`` for the
+    plain variant; the post-pinning capacity for the CPpf variant) — the
+    step cap for client ``i`` is ``min(balance, remaining - alloc[i])``.
+    Stops when no active client has a positive marginal utility and
+    returns the undistributed balance for the spread step.
+    """
+    curves = np.asarray(curves, dtype=np.float64)
+    active = np.asarray(active, dtype=bool)
+    n = curves.shape[0]
+    alloc = np.full(n, min_units, dtype=np.int64)
+    balance = total_units - n * min_units
+    while balance > 0:
+        best_mu, best_i, best_k = -np.inf, -1, 0
+        for i in range(n):
+            cap = min(balance, remaining - int(alloc[i]))
+            if not active[i] or cap <= 0:
+                continue
+            ks = np.arange(1, cap + 1)
+            mus = (curves[i, alloc[i] + 1: alloc[i] + cap + 1]
+                   - curves[i, alloc[i]]) / ks
+            b = int(np.argmax(mus))          # first max -> smallest k
+            if mus[b] > best_mu:             # strict -> lowest index wins
+                best_mu, best_i, best_k = float(mus[b]), i, b + 1
+        if best_i < 0 or best_mu <= 0.0:
+            break
+        alloc[best_i] += best_k
+        balance -= best_k
+    return alloc, int(balance)
+
+
+def spread_ref(
+    curves: np.ndarray,
+    alloc: np.ndarray,
+    balance: int,
+    active: np.ndarray,
+    remaining: int,
+) -> np.ndarray:
+    """The zero-utility even-spread: distribute ``balance`` by remaining
+    potential gain (``curve[remaining] - curve[alloc]``), stable order."""
+    alloc = np.array(alloc, dtype=np.int64)
+    if balance <= 0:
+        return alloc
+    active = np.asarray(active, dtype=bool)
+    n = len(alloc)
+    gain = curves[np.arange(n), np.full(n, remaining)] \
+        - curves[np.arange(n), alloc]
+    key = np.where(active, -gain, np.inf)
+    order = np.argsort(key, kind="stable")
+    rank = np.argsort(order, kind="stable")
+    n_act = max(int(active.sum()), 1)
+    share = balance // n_act + (rank < balance % n_act)
+    return np.where(active, alloc + share, alloc)
+
+
+def lookahead_ref(
+    curves: np.ndarray,
+    total_units: int,
+    min_units: int = 4,
+) -> np.ndarray:
+    """Plain Lookahead oracle: greedy + spread over all-active clients."""
+    n = np.asarray(curves).shape[0]
+    active = np.ones(n, dtype=bool)
+    alloc, balance = greedy_ref(
+        curves, min_units, active, total_units, total_units)
+    return spread_ref(curves, alloc, balance, active, total_units)
+
+
+def lookahead_masked_ref(
+    curves: np.ndarray,
+    total_units: int,
+    min_units: int,
+    active: np.ndarray,
+) -> np.ndarray:
+    """CPpf oracle: inactive clients pinned at the floor, greedy over the
+    active subset with the capacity left after pinning; all-inactive mixes
+    split evenly with the remainder to the lowest indices."""
+    curves = np.asarray(curves, dtype=np.float64)
+    active = np.asarray(active, dtype=bool)
+    n = curves.shape[0]
+    if not active.any():
+        extra = total_units - n * min_units
+        out = np.full(n, min_units, dtype=np.int64) + extra // n
+        out[: extra % n] += 1
+        return out
+    remaining = total_units - min_units * int((~active).sum())
+    alloc, balance = greedy_ref(
+        curves, min_units, active, remaining, total_units)
+    return spread_ref(curves, alloc, balance, active, remaining)

@@ -238,26 +238,24 @@ class TimelineResult:
         return self.ipc_acc / max(self.w_acc, 1e-12)
 
 
-@functools.lru_cache(maxsize=None)
-def _compiled_stacked(
+def _make_worker(
     has_sampling: bool,
     any_cache_dynamic: bool,
     any_bandwidth_dynamic: bool,
     max_concurrent_realloc: int,
     total_units: int,
     iters: int,
-    grid_shards: Tuple[int, int],
 ):
-    """Build the jitted (optionally shard_mapped) stacked-timeline executor.
+    """Build one stacked-timeline worker for a (sub)set of managers.
 
-    Cached per static configuration so repeated sweeps reuse both the
-    Python wrapper and XLA's compilation cache; jit retraces on new array
-    shapes (different K, M, n or segment count) as usual.  Manager knobs
-    are *traced* ``(K,)`` arrays, so e.g. every all-static manager subset
-    shares one compilation; only controller machinery no manager in the
-    batch can ever reach (ATD counters without a dynamic cache, the delay
-    EMA without dynamic bandwidth, the A/B sampling state) is statically
-    dropped from the step.
+    Manager knobs are *traced* ``(K,)`` arrays, so e.g. every all-static
+    manager subset shares one compilation; only controller machinery no
+    manager in the batch can ever reach (ATD counters without a dynamic
+    cache, the delay EMA without dynamic bandwidth, the A/B sampling
+    state) is statically dropped from the step.  The bucketed executor
+    (:func:`_compiled_buckets`) instantiates one worker per
+    segment-length bucket, which is how a bucket of fully-static managers
+    sheds the sampling and ATD machinery entirely.
     """
     f64 = jnp.float64
     total_cache_f = float(total_units)
@@ -323,20 +321,28 @@ def _compiled_stacked(
         def reconfigure(operand):
             """Boundary step: cache -> bandwidth (paper priority order).
 
-            Cache reallocation runs as one *mini-greedy per reconfiguring
-            manager block*: the manager's M-row block is carved out of the
-            batch with a traced ``dynamic_slice``, its ATD grid
-            materializes from the two weight coefficients at exactly the
-            per-manager (M, n, U+1) shape, and the Lookahead while_loop
-            pays only that manager's own trip count and row width — the
-            same work profile as the per-manager fused path, just inside
-            one program.  Slot alignment (:func:`stack_tables`) keeps the
-            number of boundary slots minimal; managers not reallocating
-            here are untouched.
+            Cache reallocation gathers every reconfiguring manager's M-row
+            block (traced ``dynamic_slice``; up to the static
+            ``max_concurrent_realloc`` bound), materializes their ATD
+            grids from the two weight coefficients, and runs ONE
+            concatenated ``(G*M, n)`` masked greedy instead of G
+            sequential mini-greedies: the while_loop pays the *max* trip
+            count over the blocks, not the sum — on CPU the trips are
+            tiny-op bound, so batching the boundary refresh is the big
+            win.  Exact because the greedy is row-independent and its only
+            float reductions are max/argmax (order-insensitive), so
+            results are bit-invariant to the batch row count — unlike the
+            model eval, which is why the scan itself stays flattened 2-D.
+            Slot alignment (:func:`stack_tables`) keeps the number of
+            boundary slots minimal; managers not reallocating here are
+            untouched.
             """
             units, bw, w_off, w_on, bw_acc, active, do_r, realloc_k \
                 = operand
-            if any_cache_dynamic:
+            # Under manager-axis sharding the global concurrency bound
+            # can exceed this shard's manager count — clamp.
+            G = min(max_concurrent_realloc, K)
+            if any_cache_dynamic and G > 0:
                 # Reallocating managers first (ascending index, stable) —
                 # real managers outrank any K-padding duplicates.
                 order = jnp.argsort(~realloc_k, stable=True)
@@ -345,27 +351,33 @@ def _compiled_stacked(
                 def blk(a, off):
                     return jax.lax.dynamic_slice_in_dim(a, off, M, axis=0)
 
-                # Under manager-axis sharding the global concurrency
-                # bound can exceed this shard's manager count — clamp.
-                for g in range(min(max_concurrent_realloc, K)):
-                    k_g = order[g]
-                    valid = realloc_k[k_g]
-                    off = k_g * M
-                    # An all-inactive mask (non-CPpf rows pass all-active,
-                    # which reduces to the plain Lookahead; invalid
-                    # sentinel blocks retire after one trip).
-                    act_b = blk(active, off) & valid
-                    atd_b = (blk(hits_off, off)
-                             * blk(w_off, off)[..., :, None]
-                             + blk(hits_on, off)
-                             * blk(w_on, off)[..., :, None])
-                    fresh = lookahead_masked_traced(
-                        atd_b, blk(min32, off), act_b, total_units)
-                    old_b = blk(units, off)
-                    new_b = jnp.where(valid, fresh.astype(units.dtype),
-                                      old_b)
+                offs = [order[g] * M for g in range(G)]
+                valids = [realloc_k[order[g]] for g in range(G)]
+                # An all-inactive mask (non-CPpf rows pass all-active,
+                # which reduces to the plain Lookahead; invalid sentinel
+                # blocks retire after one trip).
+                act_all = jnp.concatenate(
+                    [blk(active, offs[g]) & valids[g] for g in range(G)],
+                    axis=0)
+                atd_all = jnp.concatenate(
+                    [blk(hits_off, offs[g])
+                     * blk(w_off, offs[g])[..., :, None]
+                     + blk(hits_on, offs[g])
+                     * blk(w_on, offs[g])[..., :, None]
+                     for g in range(G)], axis=0)
+                min_all = jnp.concatenate(
+                    [blk(min32, offs[g]) for g in range(G)], axis=0)
+                fresh = lookahead_masked_traced(
+                    atd_all, min_all, act_all, total_units)
+                for g in range(G):
+                    old_b = blk(units, offs[g])
+                    new_b = jnp.where(
+                        valids[g],
+                        fresh[g * M:(g + 1) * M].astype(units.dtype),
+                        old_b)
                     units = jax.lax.dynamic_update_slice_in_dim(
-                        units, new_b, off, axis=0)
+                        units, new_b, offs[g], axis=0)
+            if any_cache_dynamic:
                 # The boundary ATD decay is a scalar multiply of the whole
                 # grid, i.e. of both weight coefficients.
                 decay_w = atd_decay[..., 0]                    # (B, 1)
@@ -445,9 +457,98 @@ def _compiled_stacked(
                 {"ipc_acc": ipc_acc, "cache_units": units, "bandwidth": bw,
                  "prefetch_on": pf, "active": active}.items()}
 
+    return worker
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_stacked(
+    has_sampling: bool,
+    any_cache_dynamic: bool,
+    any_bandwidth_dynamic: bool,
+    max_concurrent_realloc: int,
+    total_units: int,
+    iters: int,
+    grid_shards: Tuple[int, int],
+):
+    """Build the jitted (optionally shard_mapped) stacked-timeline executor.
+
+    Cached per static configuration so repeated sweeps reuse both the
+    Python wrapper and XLA's compilation cache; jit retraces on new array
+    shapes (different K, M, n or segment count) as usual.
+    """
+    worker = _make_worker(has_sampling, any_cache_dynamic,
+                          any_bandwidth_dynamic, max_concurrent_realloc,
+                          total_units, iters)
     if grid_shards != (1, 1):
         worker = distributed.shard_grid(worker, grid_shards)
     return jax.jit(worker)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_buckets(
+    bucket_statics: Tuple[Tuple[bool, bool, bool, int], ...],
+    total_units: int,
+    iters: int,
+    mix_shards: int,
+):
+    """Build the jitted multi-bucket stacked executor: one worker per
+    segment-length bucket, all inside ONE jitted program (one dispatch).
+
+    Frozen-row skipping: a manager bucketed with peers of similar table
+    length scans only ~its own slot count instead of the whole set's
+    ``s_max``, and each bucket's worker drops the controller machinery its
+    managers never reach.  Every bucket still runs the flattened 2-D
+    ``(K_g * M, n)`` row scan, so the stacked-vs-fused bit-parity contract
+    is untouched.
+
+    Sharding: bucket programs may only split the MIX axis — all buckets
+    must then address the SAME device subset (jit rejects shard_maps over
+    different device sets in one program), which a shared ``(1,
+    mix_shards)`` mesh guarantees.  Manager-axis sharding keeps the
+    single-bucket path (:func:`_compiled_stacked`).
+    """
+    workers = []
+    for (has_sampling, cache_dyn, bw_dyn, max_realloc) in bucket_statics:
+        w = _make_worker(has_sampling, cache_dyn, bw_dyn, max_realloc,
+                         total_units, iters)
+        if mix_shards > 1:
+            w = distributed.shard_grid(w, (1, mix_shards))
+        workers.append(w)
+
+    def fn(bucket_grids, bucket_mgrs, replicated):
+        return tuple(
+            w(g, m, replicated)
+            for w, g, m in zip(workers, bucket_grids, bucket_mgrs))
+
+    return jax.jit(fn)
+
+
+def _length_buckets(lens: Sequence[int]) -> List[List[int]]:
+    """Group manager indices for the bucketed stacked scan.
+
+    Managers share a bucket exactly when their segment-table lengths are
+    equal: equal lengths mean zero frozen ``NOOP`` rows inside a bucket,
+    and same-length Table-3 tables share their reconfigure slots, so
+    bucket-mates' boundary refreshes merge into ONE concatenated greedy
+    whose while_loop cost is sublinear in the row count.  (Two rejected
+    rules, both measured against per-manager fused on warm wall time:
+    merge-within-2x-length traded frozen rows for fewer buckets and
+    consistently lost; splitting further by the (sampling, cache_dynamic,
+    bandwidth_dynamic) statics triple un-merged those boundary greedies
+    and gave back ~1% — the per-slot machinery a non-dynamic manager
+    over-pays inside a mixed bucket is masked ``(B, n)`` arithmetic,
+    cheaper than a separate bucket's serial while trips.  All buckets
+    run inside ONE device program, so bucket count is free at dispatch
+    level.)  Stable: equal lengths keep spec order.
+    """
+    order = sorted(range(len(lens)), key=lambda i: (lens[i], i))
+    buckets: List[List[int]] = []
+    for i in order:
+        if buckets and lens[i] == lens[buckets[-1][0]]:
+            buckets[-1].append(i)
+        else:
+            buckets.append([i])
+    return buckets
 
 
 def _per_row(value, shape: Tuple[int, ...], dtype) -> np.ndarray:
@@ -530,9 +631,7 @@ def run_timelines(
         raise ValueError("min_ways * n exceeds capacity")
 
     tables = [segment_table(s.schedule) for s in specs]
-    kinds, acc, reconf = stack_tables(
-        tables, [RUN if s.variant == "cppf" else None for s in specs])
-    w_accs = [float(a.sum()) for a in acc]
+    accum = [RUN if s.variant == "cppf" else None for s in specs]
 
     grid = {"p_" + k: np.ascontiguousarray(
         np.broadcast_to(np.asarray(v, np.float64), (K, M, n)))
@@ -556,10 +655,7 @@ def run_timelines(
         bandwidth_delay_decay=_per_row(
             bandwidth_delay_decay, (K, M, 1), np.float64),
     )
-    mgr = {
-        "kinds": kinds,
-        "acc": acc,
-        "reconf": reconf,
+    flags = {
         "cache_dynamic": np.array([s.cache_dynamic for s in specs]),
         "bandwidth_dynamic": np.array(
             [s.bandwidth_dynamic for s in specs]),
@@ -576,38 +672,103 @@ def run_timelines(
 
     grid_shards = ((1, 1) if shard is False
                    else distributed.grid_shard_counts(K, M))
-    k_pad = -(-K // grid_shards[0]) * grid_shards[0]
-    m_pad = -(-M // grid_shards[1]) * grid_shards[1]
-    # Pad with copies of the last manager/mix row; sliced off after the
-    # program (padding rows are duplicates and never feed real rows).
-    grid = _pad_axis(_pad_axis(grid, 1, m_pad), 0, k_pad)
-    mgr = _pad_axis(mgr, 0, k_pad)
+    buckets = _length_buckets([len(t[0]) for t in tables])
+    if grid_shards[0] == 1 and len(buckets) > 1:
+        # Frozen-row-skipping path: short-table managers stop paying for
+        # every slot of the longest table.  Only the mix axis may shard
+        # here (all buckets then share one mesh over one device subset);
+        # a sharded manager axis takes the single-bucket path below.
+        out = _run_buckets(
+            buckets, tables, accum, grid, flags, replicated,
+            K, M, grid_shards[1], int(total_units), int(iters))
+    else:
+        kinds, acc, reconf = stack_tables(
+            [tables[i] for i in range(K)], accum)
+        mgr = {"kinds": kinds, "acc": acc, "reconf": reconf, **flags}
+        k_pad = -(-K // grid_shards[0]) * grid_shards[0]
+        m_pad = -(-M // grid_shards[1]) * grid_shards[1]
+        # Pad with copies of the last manager/mix row; sliced off after
+        # the program (padding rows are duplicates, never feed real rows).
+        grid = _pad_axis(_pad_axis(grid, 1, m_pad), 0, k_pad)
+        mgr = _pad_axis(mgr, 0, k_pad)
 
-    has_sampling = bool(np.isin(kinds, (SAMPLE_OFF, SAMPLE_ON)).any())
-    # The most cache-dynamic managers that ever reallocate on the same
-    # slot — the static bound on mini-greedies per boundary step.
-    cache_dyn_col = np.array([s.cache_dynamic for s in specs])[:, None]
-    max_realloc = int((reconf & cache_dyn_col).sum(axis=0).max(initial=0))
-    fn = _compiled_stacked(
-        has_sampling,
-        any(s.cache_dynamic for s in specs),
-        any(s.bandwidth_dynamic for s in specs),
-        max_realloc, int(total_units), int(iters), grid_shards)
-    record_dispatch()
-    with memsys_jax.x64_context():
-        out = {k: np.asarray(v)[:K, :M]
-               for k, v in fn(grid, mgr, replicated).items()}
+        has_sampling = bool(np.isin(kinds, (SAMPLE_OFF, SAMPLE_ON)).any())
+        # The most cache-dynamic managers that ever reallocate on the same
+        # slot — the static bound on mini-greedies per boundary step.
+        cache_dyn_col = flags["cache_dynamic"][:, None]
+        max_realloc = int(
+            (reconf & cache_dyn_col).sum(axis=0).max(initial=0))
+        fn = _compiled_stacked(
+            has_sampling,
+            any(s.cache_dynamic for s in specs),
+            any(s.bandwidth_dynamic for s in specs),
+            max_realloc, int(total_units), int(iters), grid_shards)
+        record_dispatch()
+        with memsys_jax.x64_context():
+            res = {k: np.asarray(v)[:K, :M]
+                   for k, v in fn(grid, mgr, replicated).items()}
+        w_accs = [float(a.sum()) for a in acc]
+        out = {k: {"w_acc": w_accs[k],
+                   **{f: res[f][k] for f in res}} for k in range(K)}
     return [
         TimelineResult(
-            ipc_acc=out["ipc_acc"][k],
-            w_acc=w_accs[k],
-            cache_units=out["cache_units"][k].astype(np.int64),
-            bandwidth=out["bandwidth"][k],
-            prefetch_on=out["prefetch_on"][k],
-            active=out["active"][k],
+            ipc_acc=out[k]["ipc_acc"],
+            w_acc=out[k]["w_acc"],
+            cache_units=out[k]["cache_units"].astype(np.int64),
+            bandwidth=out[k]["bandwidth"],
+            prefetch_on=out[k]["prefetch_on"],
+            active=out[k]["active"],
         )
         for k in range(K)
     ]
+
+
+def _run_buckets(buckets, tables, accum, grid, flags, replicated,
+                 K: int, M: int, mix_shards: int,
+                 total_units: int, iters: int) -> dict:
+    """Execute the stacked set as per-length bucket scans in ONE program.
+
+    Each bucket stacks only its own tables (:func:`stack_tables` snaps
+    reconfigure slots within the bucket) and carries its own static knob
+    summary, so e.g. the fully-static bucket drops the ATD precompute and
+    sampling machinery outright.  Returns ``{spec_index: {field: (M, n)}}``
+    host arrays, spec order restored.
+    """
+    m_pad = -(-M // mix_shards) * mix_shards
+    statics = []
+    bucket_grids = []
+    bucket_mgrs = []
+    w_accs = {}
+    for idx_g in buckets:
+        sel = np.asarray(idx_g)
+        kinds_g, acc_g, reconf_g = stack_tables(
+            [tables[i] for i in idx_g], [accum[i] for i in idx_g])
+        for row, i in enumerate(idx_g):
+            w_accs[i] = float(acc_g[row].sum())
+        mgr_g = {"kinds": kinds_g, "acc": acc_g, "reconf": reconf_g,
+                 **{k: v[sel] for k, v in flags.items()}}
+        grid_g = _pad_axis({k: v[sel] for k, v in grid.items()}, 1, m_pad)
+        cache_dyn_col = mgr_g["cache_dynamic"][:, None]
+        statics.append((
+            bool(np.isin(kinds_g, (SAMPLE_OFF, SAMPLE_ON)).any()),
+            bool(mgr_g["cache_dynamic"].any()),
+            bool(mgr_g["bandwidth_dynamic"].any()),
+            int((reconf_g & cache_dyn_col).sum(axis=0).max(initial=0)),
+        ))
+        bucket_grids.append(grid_g)
+        bucket_mgrs.append(mgr_g)
+
+    fn = _compiled_buckets(tuple(statics), total_units, iters, mix_shards)
+    record_dispatch()
+    with memsys_jax.x64_context():
+        outs = fn(tuple(bucket_grids), tuple(bucket_mgrs), replicated)
+    result = {}
+    for idx_g, o in zip(buckets, outs):
+        o = {k: np.asarray(v)[:, :M] for k, v in o.items()}
+        for row, i in enumerate(idx_g):
+            result[i] = {"w_acc": w_accs[i],
+                         **{k: v[row] for k, v in o.items()}}
+    return result
 
 
 def run_timeline(

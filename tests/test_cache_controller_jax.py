@@ -170,5 +170,61 @@ def test_cache_controller_backend_dispatch():
         ctl_np.allocate_masked(batch, active),
         ctl_jx.allocate_masked(batch, active))
 
+    # "pallas" is a valid backend since the lookahead_greedy kernel landed
+    # (tests/test_lookahead_kernel.py); anything else still rejects.
     with pytest.raises(ValueError):
-        CacheController(total, backend="pallas")
+        CacheController(total, backend="mosaic")
+
+
+def _adversarial_refresh_curves(n, U):
+    """Worst case for the greedy's trip count: client 0 is concave (best
+    step 1, highest mu early — many one-unit steps), every other client
+    convex with near-tied shapes, so the best step and its owner keep
+    shifting as the balance cap shrinks.  Under the one-stale-client
+    incremental refresh this maximizes cache invalidations between
+    greedy steps — each step dirties the winner AND shrinks every other
+    client's cap, forcing refresh trips before the next step."""
+    u = np.arange(U + 1, dtype=np.float64)
+    curves = np.empty((n, U + 1))
+    curves[0] = 100.0 * (1.0 - np.exp(-u / 3.0))
+    for i in range(1, n):
+        curves[i] = (u / U) ** 2 * (80.0 - 0.5 * i)
+    return curves
+
+
+def test_greedy_loop_trip_bound_never_abandons_live_rows():
+    """Satellite audit of the ``_greedy_loop`` trip bound.  The
+    incremental-refresh loop runs under an ``(n + 2) * U`` bound, which
+    is safe: the greedy takes <= U unit-consuming steps per row, and
+    between consecutive steps each of the n clients refreshes at most
+    once (a refreshed entry stays valid until the next step dirties the
+    winner or shrinks the cap below its k), so body applications are
+    bounded by n * U + 1 < (n + 2) * U.  The adversarial curve family
+    maximizes invalidations between steps; the loop must still exit with
+    every row finished (balance drained or stuck), never via the bound —
+    abandoning a live row would silently hand a short allocation to the
+    zero-spread tail."""
+    import jax.numpy as jnp
+
+    n, U = 8, 96
+    curves = np.stack([
+        _adversarial_refresh_curves(n, U),
+        _nonmonotone_curves(np.random.default_rng(0), n, U),
+        np.zeros((n, U + 1)),
+        _concave_curves(np.random.default_rng(1), n, U),
+    ])
+    mins = np.array([0, 3, 2, 1])
+    with ccj._x64_context():
+        alloc, balance, stuck, it = map(np.asarray, ccj._greedy_loop(
+            jnp.asarray(curves, jnp.float64), jnp.asarray(mins),
+            jnp.ones((4, n), dtype=bool),
+            jnp.full((4,), U, dtype=jnp.int32), total_units=U))
+    # The loop retired every row on its own terms, not via the bound.
+    assert int(it) < (n + 2) * U
+    assert np.all((balance == 0) | stuck)
+    assert np.all(balance >= 0)
+    # And the full pipeline (greedy + spread) still matches the golden.
+    got = ccj.lookahead_allocate(curves, U, mins)
+    for b in range(4):
+        np.testing.assert_array_equal(
+            got[b], lookahead_allocate(curves[b], U, int(mins[b])))

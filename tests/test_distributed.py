@@ -11,6 +11,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow   # 8-device subprocess training runs
+
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 SCRIPT = r'''

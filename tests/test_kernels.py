@@ -17,6 +17,10 @@ from repro.kernels.flash_decode.ref import decode_ref
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ssd_ref
 
+# Interpret-mode Pallas emulation is slow on CPU — the whole file sits in
+# the slow tier (deselected by default, run by CI and -m "slow or not slow").
+pytestmark = pytest.mark.slow
+
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
 

@@ -6,6 +6,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow   # 4-device subprocess pipeline run
+
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 SCRIPT = r'''

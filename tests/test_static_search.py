@@ -378,6 +378,7 @@ json.dump({f: {"ws": res.topk_ws[f].tolist(),
 """
 
 
+@pytest.mark.slow
 def test_workload_axis_shards_across_forced_host_devices():
     """The same search on 8 forced host devices (workload axis sharded
     via repro.distributed.shard_rows, padded 3 -> 8) matches the

@@ -34,12 +34,21 @@ from repro.core import (
     device_dispatches,
     reset_device_dispatches,
 )
+from repro.core.coordinator import ScheduleSegment
 from repro.sim import MANAGER_NAMES, WORKLOADS, random_mixes, run_sweep
 from repro.sim.runner import CMPConfig
 from repro.sim.sweep import (
     CapacityInvariantError,
     _check_bandwidth_capacity,
     _check_units_capacity,
+)
+from repro.sim.timeline_jax import (
+    NOOP,
+    RUN,
+    _length_buckets,
+    cppf_schedule,
+    segment_table,
+    stack_tables,
 )
 
 SEGMENT = CMPConfig(timeline_backend="segment")
@@ -150,6 +159,64 @@ def test_capacity_invariant_checks_raise_real_exceptions():
     assert issubclass(CapacityInvariantError, RuntimeError)
 
 
+def test_stack_tables_preserves_trailing_boundary_rows():
+    """Satellite: a timeline that ENDS on a reconfigure boundary carries
+    it as a zero-duration NOOP row (``segment_table``); stacking that
+    table under a longer one (which right-pads it with more NOOPs) must
+    not drop or reorder the boundary."""
+    p = CBPParams()
+    short = segment_table(cppf_schedule(20.0, p))   # ends: (NOOP, 0, True)
+    assert short[0][-1] == NOOP and bool(short[2][-1])
+    long = segment_table(
+        [ScheduleSegment("run", 10.0)] * 6)          # 6 rows, no boundary
+    kinds, acc, reconf = stack_tables([short, long], [RUN, None])
+    # every boundary of the short table survives, the trailing one on a
+    # NOOP row, and padding slots carry no flags.
+    assert reconf[0].sum() == short[2].sum()
+    last = int(np.flatnonzero(reconf[0])[-1])
+    assert kinds[0, last] == NOOP and acc[0, last] == 0.0
+    # row placement is order-preserving: kinds appear in table order.
+    placed = kinds[0][kinds[0] != NOOP]
+    orig = short[0][short[0] != NOOP]
+    np.testing.assert_array_equal(placed, orig)
+
+
+def test_trailing_boundary_realloc_fires_on_exact_multiple_total_ms():
+    """Satellite pin: total_ms an exact multiple of the reconfigure
+    interval makes CPpf's FINAL reallocation ride the trailing
+    zero-duration NOOP row.  The stacked (bucketed) program must fire it
+    exactly like the per-segment host loop does."""
+    mixes = [WORKLOADS["w1"], WORKLOADS["w2"]]
+    p = CBPParams()
+    assert (20.0 / p.reconfiguration_interval_ms) % 1.0 == 0.0
+    stacked = run_sweep(mixes, managers=["CPpf", "CBP"], total_ms=20.0)
+    seg = run_sweep(mixes, managers=["CPpf", "CBP"], total_ms=20.0,
+                    config=SEGMENT)
+    for name in ("CPpf", "CBP"):
+        np.testing.assert_array_equal(
+            stacked.final_alloc[name].cache_units,
+            seg.final_alloc[name].cache_units, err_msg=name)
+        np.testing.assert_array_equal(
+            stacked.final_alloc[name].prefetch_on,
+            seg.final_alloc[name].prefetch_on, err_msg=name)
+
+
+def test_length_buckets_group_exact_length():
+    """The frozen-row-skipping rule: a bucket holds exactly the managers
+    with the SAME table length — zero frozen rows inside every bucket,
+    and same-length tables share reconfigure slots so their boundary
+    greedies merge into one concatenated while_loop."""
+    assert _length_buckets([1, 1, 30, 10, 13, 30]) == [[0, 1], [3], [4],
+                                                       [2, 5]]
+    assert _length_buckets([5]) == [[0]]
+    for lens in ([1, 2, 3, 4], [7, 7, 7], [1, 100], [3, 9, 27]):
+        buckets = _length_buckets(lens)
+        assert sorted(i for b in buckets for i in b) == list(
+            range(len(lens)))
+        for b in buckets:
+            assert len({lens[i] for i in b}) == 1
+
+
 _SHARD_SCRIPT = """
 import json, sys
 import numpy as np
@@ -180,6 +247,7 @@ def _forced_device_env(n: int = 8) -> dict:
     return env
 
 
+@pytest.mark.slow
 def test_manager_mix_grid_shards_across_forced_host_devices():
     """The same stacked sweep on 8 forced host devices — the (manager,
     mix) grid sharded over a (4, 2) mesh via repro.distributed.shard_grid,
@@ -227,6 +295,7 @@ print("OK")
 """
 
 
+@pytest.mark.slow
 def test_row_shard_count_clamps_to_rows_on_forced_devices():
     """Regression: 8 forced devices + 3 mixes used to build 8 shards and
     pad 3 rows to 8 (more padding than data); shard counts now clamp to
@@ -236,3 +305,59 @@ def test_row_shard_count_clamps_to_rows_on_forced_devices():
         capture_output=True, text=True, timeout=540)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "OK" in proc.stdout
+
+
+_PRIME_SCRIPT = """
+import json
+import sys
+
+import jax
+import numpy as np
+
+from repro import distributed
+from repro.sim import WORKLOADS, run_sweep
+
+assert jax.device_count() == 7, jax.device_count()
+# 7 is prime: no factorization covers every device, so the mesh search
+# settles for the best a * b <= 7 and leaves the residual device idle.
+assert distributed.grid_shard_counts(3, 2) == (3, 2)     # uses 6 of 7
+assert distributed.grid_shard_counts(7, 1) == (7, 1)
+assert distributed.grid_shard_counts(1, 7) == (1, 7)
+for K in range(1, 12):
+    for M in range(1, 12):
+        a, b = distributed.grid_shard_counts(K, M)
+        assert 1 <= a <= K and 1 <= b <= M and a * b <= 7, (K, M, a, b)
+        # padding per axis stays below one shard's worth of rows.
+        assert -(-K // a) * a - K < a and -(-M // b) * b - M < b
+
+names = ["only cache", "CPpf", "CBP"]
+res = run_sweep([WORKLOADS["w1"], WORKLOADS["w2"]], managers=names,
+                total_ms=20.0)
+json.dump({name: {"ipc": np.asarray(res.ipc[name]).tolist(),
+                  "units": np.asarray(
+                      res.final_alloc[name].cache_units).tolist()}
+           for name in names}, sys.stdout)
+"""
+
+
+@pytest.mark.slow
+def test_prime_device_count_shards_and_stays_bit_identical():
+    """Satellite regression: a PRIME forced device count (7) can't tile
+    the (3 manager, 2 mix) grid exactly — ``grid_shard_counts`` must
+    still produce in-range per-axis counts (3, 2) on 6 of 7 devices, and
+    the sharded sweep stays bit-identical to the single-device run."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _PRIME_SCRIPT], env=_forced_device_env(7),
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    sharded = json.loads(proc.stdout)
+
+    names = ["only cache", "CPpf", "CBP"]
+    ref = run_sweep([WORKLOADS["w1"], WORKLOADS["w2"]], managers=names,
+                    total_ms=20.0)
+    for name in names:
+        np.testing.assert_array_equal(
+            np.asarray(sharded[name]["ipc"]), ref.ipc[name], err_msg=name)
+        np.testing.assert_array_equal(
+            np.asarray(sharded[name]["units"]),
+            ref.final_alloc[name].cache_units, err_msg=name)
