@@ -22,6 +22,7 @@ def main() -> None:
         paper_figs,
         roofline_report,
         scenario_report,
+        serving_bench,
     )
 
     benches = {
@@ -34,6 +35,13 @@ def main() -> None:
         "fig5": (lambda: paper_figs.fig5_potential(
             64 if args.quick else 640)),
         "fig5_smoke": fig5_smoke.main,
+        # serving engine: device-resident continuous batching vs the host
+        # loop; --quick runs the CI smoke shape, default the 256-4096
+        # slot sweep with the >= 5x acceptance gate at >= 256 slots.
+        "serving_bench": (lambda: serving_bench.main(
+            serving_bench.SMOKE_SLOTS if args.quick
+            else serving_bench.DEFAULT_SLOTS,
+            groups=1, smoke=args.quick, compare_host_all=False)),
         "fig9_10": paper_figs.fig9_fig10_main,
         "fig11": paper_figs.fig11_case_study,
         "fig12": paper_figs.fig12_sensitivity,

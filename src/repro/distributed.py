@@ -132,7 +132,8 @@ def grid_shard_counts(n_groups: int, n_rows: int) -> Tuple[int, int]:
 
 
 def shard_grid(worker, grid_shards: Tuple[int, int],
-               axis_names: Tuple[str, str] = ("mgr", "mix")):
+               axis_names: Tuple[str, str] = ("mgr", "mix"),
+               grid_specs=None):
     """shard_map ``worker(grid_tree, group_tree, replicated_tree)`` over a
     2-D (group x row) grid.
 
@@ -144,6 +145,13 @@ def shard_grid(worker, grid_shards: Tuple[int, int],
     ``grid_shards == (1, n)`` this degenerates to :func:`shard_rows` over
     the row axis (the single-group / single-device fallback); callers skip
     shard_map entirely at ``(1, 1)``.
+
+    ``grid_specs`` optionally overrides the grid tree's partition specs
+    with a pytree (prefix) of :class:`PartitionSpec` — for leaves whose
+    grid axes are NOT leading (the serving engine's KV cache carries its
+    slot axis at position 1, so its leaves use
+    ``PartitionSpec(None, g, r)``).  The same specs describe the worker's
+    outputs, which must mirror the grid tree's structure.
     """
     a, b = grid_shards
     devices = None
@@ -151,10 +159,12 @@ def shard_grid(worker, grid_shards: Tuple[int, int],
         devices = jax.devices()[: a * b]
     mesh = make_mesh((a, b), axis_names, devices=devices)
     g, r = axis_names
+    if grid_specs is None:
+        grid_specs = PartitionSpec(g, r)
     return shard_map(
         worker, mesh,
-        in_specs=(PartitionSpec(g, r), PartitionSpec(g), PartitionSpec()),
-        out_specs=PartitionSpec(g, r))
+        in_specs=(grid_specs, PartitionSpec(g), PartitionSpec()),
+        out_specs=grid_specs)
 
 
 # Logical axis groups: "dp" spreads over every data-parallel mesh axis.

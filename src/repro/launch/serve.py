@@ -5,7 +5,11 @@ engine binds the full config (the dry-run proves serve_step compiles on
 the production mesh).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b \
-      --requests 12 --streams 3 [--no-cbp]
+      --requests 12 --streams 3 [--no-cbp] [--engine jit]
+
+``--engine jit`` swaps in the device-resident continuous-batching engine
+(one jitted program per reconfiguration interval, in-trace CBP); with
+``--groups G`` its stream groups shard across visible devices.
 """
 from __future__ import annotations
 
@@ -16,7 +20,12 @@ import numpy as np
 
 from repro import configs
 from repro.models import build
-from repro.serving import EngineConfig, Request, ServingEngine
+from repro.serving import (
+    EngineConfig,
+    JitServingEngine,
+    Request,
+    ServingEngine,
+)
 
 
 def main() -> None:
@@ -27,6 +36,12 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--no-cbp", action="store_true")
+    ap.add_argument("--engine", default="host", choices=("host", "jit"),
+                    help="host = per-token Python loop; "
+                         "jit = device-resident interval programs")
+    ap.add_argument("--groups", type=int, default=1,
+                    help="stream groups for --engine jit (sharded across "
+                         "devices when more than one is visible)")
     ap.add_argument("--full", action="store_true",
                     help="full (non-smoke) config — TPU only")
     args = ap.parse_args()
@@ -39,7 +54,12 @@ def main() -> None:
         batch_slots=args.slots, max_len=96, total_pages=16 * args.streams,
         page_tokens=8,
         reconfig_every_steps=(10 ** 9 if args.no_cbp else 24))
-    engine = ServingEngine(model, params, n_streams=args.streams, cfg=ecfg)
+    if args.engine == "jit":
+        engine = JitServingEngine(model, params, n_streams=args.streams,
+                                  cfg=ecfg, n_groups=args.groups)
+    else:
+        engine = ServingEngine(model, params, n_streams=args.streams,
+                               cfg=ecfg)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -54,12 +74,19 @@ def main() -> None:
                             max_new_tokens=args.max_new))
 
     engine.run(reqs, max_steps=5000)
-    print(f"arch={args.arch} cbp={'off' if args.no_cbp else 'on'} "
+    print(f"arch={args.arch} engine={args.engine} "
+          f"cbp={'off' if args.no_cbp else 'on'} "
           f"steps={engine.steps} reconfigs={engine.reconfigs}")
+    if args.engine == "jit":
+        partition, hit_rate = engine.partition, engine.demand_hit_rate
+    else:
+        partition = engine.pool.partition
+        hit_rate = [engine.pool.stats[s].hit_rate
+                    for s in range(args.streams)]
     for s in range(args.streams):
-        st = engine.pool.stats[s]
-        print(f"  stream {s}: pages={int(engine.pool.partition[s]):3d} "
-              f"hit-rate={st.hit_rate:5.1%} slots={engine.slot_share[s]:.2f}")
+        print(f"  stream {s}: pages={int(partition[s]):3d} "
+              f"hit-rate={hit_rate[s]:5.1%} "
+              f"slots={engine.slot_share[s]:.2f}")
     done = sum(1 for r in reqs if r.generated)
     print(f"  completed {done}/{len(reqs)}")
 

@@ -140,6 +140,11 @@ def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, cur_len):
     """One-token attention against the cache; returns (out, new_k, new_v).
 
     cache_k/v: (B, Smax, Hkv, Dh), sequence-sharded over "model".
+    ``cur_len`` is either a scalar () — every row writes/attends at the
+    same position — or a per-row ``(B,)`` vector (continuous batching:
+    each slot sits at its own position).  The vector form always takes
+    the per-row scatter path: a per-row dynamic slice would unroll to B
+    DUSes, while the scatter writes exactly B rows.
     """
     b = x.shape[0]
     q, k, v = _project_qkv(p, cfg, x)   # (B, 1, H*, Dh)
@@ -147,8 +152,21 @@ def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, cur_len):
         pos = jnp.reshape(cur_len, (-1,))[:, None]  # (B|1, 1)
         q = L.apply_rope(q, pos, cfg.rope_theta)
         k = L.apply_rope(k, pos, cfg.rope_theta)
-    write_at = jnp.asarray(cur_len, jnp.int32).reshape(())
-    if cfg.decode_cache_update == "onehot":
+    per_row = jnp.ndim(cur_len) >= 1
+    if per_row:
+        # Per-row scatter: touches B rows instead of masking the whole
+        # (B, Smax) plane.  The vector form is only consumed by the
+        # serving engines, whose caches are unsharded or BATCH-sharded
+        # (slot axis) — on a sequence-sharded cache this scatter would
+        # hit the same GSPMD all-gather as the DUS path below.
+        write_at = jnp.asarray(cur_len, jnp.int32).reshape(-1)  # (B,)
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, write_at].set(
+            _kv_store(cfg, k, cache_k)[:, 0])
+        cache_v = cache_v.at[rows, write_at].set(
+            _kv_store(cfg, v, cache_v)[:, 0])
+    elif cfg.decode_cache_update == "onehot":
+        write_at = jnp.asarray(cur_len, jnp.int32).reshape(())
         # Sharded-friendly ring-buffer write: a dynamic-index DUS on a
         # sequence-SHARDED dim makes GSPMD all-gather the whole cache;
         # the equivalent one-hot masked update is elementwise and stays
@@ -158,6 +176,7 @@ def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, cur_len):
         cache_k = jnp.where(sel, _kv_store(cfg, k, cache_k), cache_k)
         cache_v = jnp.where(sel, _kv_store(cfg, v, cache_v), cache_v)
     else:
+        write_at = jnp.asarray(cur_len, jnp.int32).reshape(())
         cache_k = jax.lax.dynamic_update_slice_in_dim(
             cache_k, _kv_store(cfg, k, cache_k), write_at, axis=1)
         cache_v = jax.lax.dynamic_update_slice_in_dim(

@@ -1,4 +1,6 @@
 from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.engine_jax import JitServingEngine
 from repro.serving.kv_cache import PagedKVPool
 
-__all__ = ["ServingEngine", "EngineConfig", "Request", "PagedKVPool"]
+__all__ = ["ServingEngine", "EngineConfig", "Request", "PagedKVPool",
+           "JitServingEngine"]

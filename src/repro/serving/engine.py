@@ -1,4 +1,4 @@
-"""Batched serving engine with full CBP coordination.
+"""Batched serving engine with full CBP coordination (host reference).
 
 The engine runs greedy decode over a fixed slot batch (continuous batching:
 finished requests release their slot to the queue) and binds all three CBP
@@ -10,7 +10,26 @@ knobs:
     decode slots is allocated proportionally to its measured queue wait
     (Algorithm 1, units = slots/interval instead of GB/s);
   * prefetch   — KV-page readahead per stream, A/B sampled and throttled
-    by measured tokens/sec speedup (Algorithm 2).
+    by the measured DEMAND hit-rate speedup (Algorithm 2; readahead
+    touches are tagged prefetch in the pool so they cannot inflate their
+    own A/B signal).
+
+This host loop is the golden reference for the device-resident engine
+(:mod:`repro.serving.engine_jax`): everything that decides tokens or
+scheduling is deterministic —
+
+  * per-slot positions travel to ``decode_step`` as a VECTOR, so a newly
+    admitted slot decodes at ITS position 0 while its neighbours sit
+    mid-sequence (a scalar ``pos.max()`` used to make staggered
+    admissions write/attend at the wrong cache rows);
+  * queue wait is accounted in decode STEPS keyed by an engine-assigned
+    request id (wall-clock timestamps made Algorithm 1 nondeterministic,
+    and ``t_in if t_in else ...`` misfired on the falsy-but-valid zeroth
+    tick and on re-admission);
+  * the token-bucket admission pick is a per-STREAM deficit argmax with a
+    lowest-stream-index tie-break, then FIFO within the winning stream
+    (was a first-come scan over the pending list, i.e. the tie-break
+    depended on interleaving).
 
 On-CPU tests drive it with tiny models; the decode step is the same jitted
 ``model.decode_step`` the dry-run lowers for the production mesh.
@@ -18,14 +37,16 @@ On-CPU tests drive it with tiny models; the decode step is the same jitted
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bandwidth_controller import allocate_bandwidth
+from repro.core.bandwidth_controller import (
+    allocate_bandwidth,
+    check_bandwidth_floor,
+)
 from repro.core.prefetch_controller import throttle_decision
 from repro.models.model import Model
 from repro.serving.kv_cache import PagedKVPool
@@ -40,6 +61,8 @@ class Request:
     generated: Optional[List[int]] = None
     slot: int = -1
     pages_touched: int = 0
+    rid: int = -1                      # engine-assigned id; stable across
+    #                                    re-admission (id(req) is not)
 
 
 @dataclasses.dataclass
@@ -60,6 +83,8 @@ class ServingEngine:
         self.params = params
         self.cfg = cfg or EngineConfig()
         self.n_streams = n_streams
+        check_bandwidth_floor(self.cfg.min_slot_share, n_streams,
+                              float(self.cfg.batch_slots))
         self.pool = PagedKVPool(self.cfg.total_pages, n_streams)
         self.kv = model.init_cache(self.cfg.batch_slots, self.cfg.max_len,
                                    dtype=jnp.float32)
@@ -72,15 +97,16 @@ class ServingEngine:
         self.tokens_done = np.zeros(n_streams)
         self.steps = 0
         self.reconfigs = 0
+        self._next_rid = 0
 
     # ------------------------------------------------------------- #
 
     def _touch_pages(self, req: Request, pos: int) -> None:
         page = pos // self.cfg.page_tokens
-        self.pool.access(req.stream, (req.stream, id(req) % 97, page))
+        self.pool.access(req.stream, (req.stream, req.rid, page))
         if self.readahead[req.stream]:
-            self.pool.access(req.stream, (req.stream, id(req) % 97,
-                                          page + 1))
+            self.pool.access(req.stream, (req.stream, req.rid, page + 1),
+                             prefetch=True)
         req.pages_touched += 1
 
     def run(self, requests: List[Request], max_steps: int = 10_000
@@ -91,45 +117,52 @@ class ServingEngine:
         active: List[Optional[Request]] = [None] * cfgE.batch_slots
         tokens = np.zeros((cfgE.batch_slots, 1), dtype=np.int32)
         pos = np.zeros(cfgE.batch_slots, dtype=np.int64)
-        enqueue_time: Dict[int, float] = {}
+        enqueue_step: Dict[int, int] = {}
         stream_active = np.zeros(self.n_streams)
 
         def admit():
             for i in range(cfgE.batch_slots):
                 if active[i] is not None:
                     continue
-                # token-bucket: pick the pending request whose stream is
-                # most under its slot share
-                best_j = -1
-                best_deficit = -1e18
-                for j, r in enumerate(pending):
-                    deficit = (self.slot_share[r.stream]
-                               - stream_active[r.stream])
-                    if deficit > best_deficit:
-                        best_deficit, best_j = deficit, j
-                if best_j < 0:
+                if not pending:
                     break
+                # token-bucket: the pending STREAM most under its slot
+                # share wins; exact deficit ties break to the lowest
+                # stream index, then FIFO within the stream.
+                deficit = self.slot_share - stream_active
+                has_pending = np.zeros(self.n_streams, dtype=bool)
+                for r in pending:
+                    has_pending[r.stream] = True
+                deficit = np.where(has_pending, deficit, -np.inf)
+                s = int(np.argmax(deficit))   # first max = lowest index
+                best_j = next(j for j, r in enumerate(pending)
+                              if r.stream == s)
                 req = pending.pop(best_j)
                 req.generated = []
                 req.slot = i
                 active[i] = req
                 stream_active[req.stream] += 1
-                t_in = enqueue_time.pop(id(req), None)
+                t_in = enqueue_step.pop(req.rid, None)
+                # `is not None`: step 0 is a perfectly valid enqueue tick.
                 self.queue_wait[req.stream] += (
-                    time.monotonic() - t_in if t_in else 0.001)
+                    self.steps - t_in if t_in is not None else 0.0)
                 tokens[i, 0] = req.prompt[0]
                 pos[i] = 0
 
         for r in pending:
-            enqueue_time[id(r)] = time.monotonic()
+            r.rid = self._next_rid
+            self._next_rid += 1
+            enqueue_step[r.rid] = self.steps
         admit()
 
         steps = 0
         while any(a is not None for a in active) and steps < max_steps:
-            cur = int(pos.max())
+            # Per-slot positions go down as a VECTOR: each slot writes and
+            # attends at its own position (a scalar max() corrupted newly
+            # admitted slots whose position had reset to 0).
             logits, self.kv = self._decode(
                 self.params, self.kv, jnp.asarray(tokens),
-                jnp.asarray(cur, jnp.int32))
+                jnp.asarray(pos, jnp.int32))
             nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1))
             for i, req in enumerate(active):
                 if req is None:
@@ -167,9 +200,10 @@ class ServingEngine:
             self.queue_wait + 1e-6, float(self.cfg.batch_slots),
             self.cfg.min_slot_share)
         self.queue_wait *= 0.5  # accumulate-with-decay (paper §3.3)
-        # 3. prefetch: A/B throttle readahead on per-stream hit-rate gain
-        # (tokens/sec proxy on CPU): enable readahead for streams whose
-        # hit rate improved while it was on.
+        # 3. prefetch: A/B throttle readahead on per-stream DEMAND
+        # hit-rate gain (tokens/sec proxy on CPU): enable readahead for
+        # streams whose demand hit rate improved while it was on —
+        # prefetch touches are tagged in the pool and excluded here.
         rates = np.array([s.hit_rate for s in self.pool.stats])
         base = getattr(self, "_last_rates", rates)
         self.readahead = throttle_decision(

@@ -27,14 +27,31 @@ from repro.core.cache_controller import CacheController
 
 @dataclasses.dataclass
 class StreamStats:
+    """Per-stream counters with demand accesses separated from prefetch.
+
+    ``hits``/``misses`` count DEMAND accesses only; readahead touches land
+    in ``prefetch_hits``/``prefetch_misses``.  Algorithm 2 throttles on the
+    demand hit-rate gain — folding prefetch touches into the same counters
+    let the prefetcher inflate its own A/B signal (every readahead touch of
+    an already-resident page counted as a "hit" the prefetcher caused).
+    """
+
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    prefetch_hits: int = 0
+    prefetch_misses: int = 0
 
     @property
     def hit_rate(self) -> float:
+        """Demand hit rate — the Algorithm-2 A/B signal."""
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        total = self.prefetch_hits + self.prefetch_misses
+        return self.prefetch_hits / total if total else 0.0
 
 
 class PagedKVPool:
@@ -63,17 +80,32 @@ class PagedKVPool:
 
     # ---------------- access path ---------------- #
 
-    def access(self, stream: int, page_key: Hashable) -> bool:
+    def access(self, stream: int, page_key: Hashable,
+               prefetch: bool = False) -> bool:
         """Touch a page; returns True on hit.  Misses insert the page,
-        evicting the stream's LRU page when over partition."""
+        evicting the stream's LRU page when over partition.
+
+        ``prefetch=True`` tags a readahead touch: it moves pages and feeds
+        the stack-distance monitor exactly like a demand access (prefetched
+        pages genuinely occupy the partition, so the utility curve must see
+        them), but the hit/miss lands in the prefetch counters so
+        :attr:`StreamStats.hit_rate` stays a pure demand signal.
+        """
         self.monitors[stream].access(page_key)
         res = self._resident[stream]
+        st = self.stats[stream]
         hit = page_key in res
         if hit:
             res.move_to_end(page_key)
-            self.stats[stream].hits += 1
+            if prefetch:
+                st.prefetch_hits += 1
+            else:
+                st.hits += 1
         else:
-            self.stats[stream].misses += 1
+            if prefetch:
+                st.prefetch_misses += 1
+            else:
+                st.misses += 1
             res[page_key] = True
         self._enforce(stream)
         return hit

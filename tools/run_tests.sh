@@ -7,7 +7,10 @@
 # (benchmarks/sweep_smoke.py): asserts zero per-mix host allocator calls
 # and records sweep wall-time JSON under results/bench/ — plus the Fig. 5
 # static-search smoke (benchmarks/fig5_smoke.py): device-dispatch budget,
-# batched-vs-numpy parity spot checks and the min-of-2 warm wall record.
+# batched-vs-numpy parity spot checks and the min-of-2 warm wall record —
+# plus the serving-engine smoke (benchmarks/serving_bench.py --smoke):
+# one-dispatch-per-reconfig-interval budget and the jit-vs-host-loop
+# tokens/sec record, warm wall gated against the committed JSON.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -27,4 +30,5 @@ python -m pytest -x -q ${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}
 if [ "$SMOKE" = "1" ]; then
   timeout 120 python -m benchmarks.sweep_smoke
   timeout 180 python -m benchmarks.fig5_smoke
+  timeout 180 python -m benchmarks.serving_bench --smoke
 fi
