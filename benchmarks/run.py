@@ -1,12 +1,40 @@
 """Benchmark harness — one entry per paper table/figure + the roofline and
 kernel benches.  Prints ``name,us_per_call,derived`` CSV rows.
 
+Each bench runs under a wall timeout (``--bench-timeout``, SIGALRM): a
+hung bench fails with a named culprit instead of stalling the whole
+harness until the CI job's global timeout reaps it anonymously.
+
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+      [--bench-timeout SECONDS]
 """
 from __future__ import annotations
 
 import argparse
+import signal
 import sys
+
+
+class BenchTimeout(RuntimeError):
+    """A bench exceeded its wall budget."""
+
+
+def _run_with_timeout(name: str, fn, seconds: int) -> None:
+    if seconds <= 0 or not hasattr(signal, "SIGALRM"):
+        fn()
+        return
+
+    def _alarm(signum, frame):
+        raise BenchTimeout(
+            f"bench {name!r} exceeded its {seconds}s wall timeout")
+
+    prev_handler = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(seconds)
+    try:
+        fn()
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev_handler)
 
 
 def main() -> None:
@@ -14,6 +42,9 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="subsample fig5's 640 workloads to 64")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--bench-timeout", type=int, default=1800,
+                    help="per-bench wall timeout in seconds "
+                         "(0 disables; default 1800)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -23,6 +54,7 @@ def main() -> None:
         roofline_report,
         scenario_report,
         serving_bench,
+        stream_bench,
     )
 
     benches = {
@@ -42,6 +74,9 @@ def main() -> None:
             serving_bench.SMOKE_SLOTS if args.quick
             else serving_bench.DEFAULT_SLOTS,
             groups=1, smoke=args.quick, compare_host_all=False)),
+        # streaming sweep service: --quick runs the CI smoke (resume
+        # parity + dispatch budget), default the 10^5-mix scale record.
+        "stream_bench": (lambda: stream_bench.main(smoke_mode=args.quick)),
         "fig9_10": paper_figs.fig9_fig10_main,
         "fig11": paper_figs.fig11_case_study,
         "fig12": paper_figs.fig12_sensitivity,
@@ -65,7 +100,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, fn in selected.items():
         try:
-            fn()
+            _run_with_timeout(name, fn, args.bench_timeout)
         except Exception as exc:  # noqa: BLE001
             failed.append(name)
             print(f"{name},0,ERROR={type(exc).__name__}:{exc}",

@@ -1,0 +1,262 @@
+"""Streaming sweep bench: resume-parity gate + pipeline overlap record.
+
+Two modes:
+
+``--smoke`` (CI, both jobs; seconds not minutes) runs a small stream and
+HARD-GATES the robustness contracts of :mod:`repro.sim.stream_sweep`:
+
+* **resume parity** — a stream with an injected dispatch failure
+  (retried successfully), a NaN-poisoned chunk (quarantined) and a
+  mid-run process kill is resumed from its checkpoint and must produce
+  final aggregates **bit-identical** to the same-seed uninterrupted run,
+  with coverage < 1.0 naming the quarantined chunk;
+* **dispatch budget** — exactly 3 recorded device programs per chunk
+  (stacked manager set + shared baseline + metrics/finite-guard), so the
+  streaming service can never regress to per-mix or per-manager dispatch;
+* **overlap sanity** — the double-buffered pipeline must not be slower
+  than serial dispatch beyond measurement noise;
+* **wall trajectory** — warm wall vs the committed
+  ``results/bench/stream_bench.json`` record, slack
+  ``STREAM_BENCH_BUDGET_X`` (default 3x; the shard8 CI job widens it).
+
+The default (full) mode is the scale record behind ROADMAP item 3: a
+10^5-mix zipf/diurnal/phase-drift stream through the double-buffered
+pipeline, plus a serial-dispatch run of the same shape over a sub-stream
+for the per-chunk overlap margin.  It records end-to-end wall, per-chunk
+walls, the overlap speedup, peak RSS (the stream must hold aggregates —
+a few KB of sketches — not rows) and the CBP-vs-baseline geomean.  Full
+records refresh the smoke's prior-record fields, not replace them.
+
+    PYTHONPATH=src python -m benchmarks.stream_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit
+from repro.core import device_dispatches
+from repro.runtime.faultinject import (
+    FaultPlan,
+    FaultSpec,
+    InjectedProcessKill,
+)
+from repro.sim.stream_sweep import StreamConfig, run_stream
+from repro.sim.workloads import StreamScenario
+
+#: Fields owned by the full-scale run, preserved across smoke refreshes.
+FULL_FIELDS = ("full_n_mixes", "full_chunk_size", "full_wall_s",
+               "full_mixes_per_s", "full_overlap_speedup",
+               "full_serial_chunk_s", "full_overlap_chunk_s", "full_cores",
+               "full_peak_rss_mb", "full_cbp_geomean_ws", "full_coverage")
+
+_NO_SLEEP = lambda s: None  # noqa: E731
+
+
+def _prior() -> dict:
+    path = RESULTS / "stream_bench.json"
+    if not path.exists():
+        return {}
+    try:
+        return json.loads(path.read_text()).get("derived", {})
+    except (ValueError, OSError):
+        return {}
+
+
+def _trees_equal(a, b) -> bool:
+    ta, tb = a.aggregates.to_tree(), b.aggregates.to_tree()
+    return all(np.array_equal(ta[k], tb[k], equal_nan=True) for k in ta)
+
+
+def _smoke_cfg(**kw) -> StreamConfig:
+    base = dict(n_mixes=64, chunk_size=16, managers=("baseline", "CBP"),
+                total_ms=20.0, seed=11,
+                scenario=StreamScenario(popularity="zipf",
+                                        phase_app_fraction=0.25))
+    base.update(kw)
+    return StreamConfig(**base)
+
+
+def resume_parity_gate() -> dict:
+    """The acceptance gate: >=1 retried dispatch failure, >=1 quarantined
+    NaN chunk, 1 mid-run kill + resume -> bit-identical final aggregates
+    vs the same-seed uninterrupted run, coverage < 1.0 naming the chunk."""
+    plan = FaultPlan((FaultSpec("dispatch_error", 0, count=1),
+                      FaultSpec("nan_poison", 1),
+                      FaultSpec("kill", 2)))
+    with tempfile.TemporaryDirectory() as tmp:
+        cfg = _smoke_cfg(checkpoint_dir=os.path.join(tmp, "ck"),
+                         checkpoint_every=1)
+        try:
+            run_stream(cfg, fault_plan=plan, sleep_fn=_NO_SLEEP)
+            raise RuntimeError("injected kill did not fire")
+        except InjectedProcessKill:
+            pass
+        resumed = run_stream(cfg, fault_plan=plan.without_kills(),
+                             resume=True, sleep_fn=_NO_SLEEP)
+    clean = run_stream(_smoke_cfg(), fault_plan=plan.without_kills(),
+                       sleep_fn=_NO_SLEEP)
+    if resumed.resumed_from is None:
+        raise RuntimeError("resume did not restore from a checkpoint")
+    if not _trees_equal(resumed, clean):
+        raise RuntimeError(
+            "resumed aggregates differ from uninterrupted run — the "
+            "bit-identical resume contract is broken")
+    if resumed.retries < 1:
+        raise RuntimeError("injected dispatch failure was never retried")
+    quarantined = [c for c, _ in resumed.quarantined]
+    if quarantined != [1] or resumed.coverage >= 1.0:
+        raise RuntimeError(
+            f"expected chunk 1 quarantined with coverage < 1, got "
+            f"chunks {quarantined} at coverage {resumed.coverage}")
+    if "mix" not in resumed.quarantined[0][1]:
+        raise RuntimeError(
+            f"quarantine reason does not name the offending mix: "
+            f"{resumed.quarantined[0][1]!r}")
+    return {
+        "parity_retries": resumed.retries,
+        "parity_quarantined_chunks": quarantined,
+        "parity_coverage": round(resumed.coverage, 4),
+        "parity_resumed_from_chunk": resumed.resumed_from,
+    }
+
+
+def smoke() -> None:
+    prior = _prior()
+    parity = resume_parity_gate()
+
+    cfg = _smoke_cfg()
+    run_stream(cfg)  # jit warm-up (compile dominates the cold run)
+    before = device_dispatches()
+    t0 = time.monotonic()
+    r_overlap = run_stream(cfg, overlap=True)
+    wall_overlap = time.monotonic() - t0
+    dispatches = device_dispatches() - before
+    budget = 3 * cfg.n_chunks
+    if dispatches != budget:
+        raise RuntimeError(
+            f"stream launched {dispatches} device programs for "
+            f"{cfg.n_chunks} chunks; the 3-per-chunk contract allows "
+            f"{budget}")
+    t0 = time.monotonic()
+    r_serial = run_stream(cfg, overlap=False)
+    wall_serial = time.monotonic() - t0
+    if not _trees_equal(r_overlap, r_serial):
+        raise RuntimeError("overlap and serial aggregates differ")
+    if r_overlap.geomean_ws["CBP"] <= r_overlap.geomean_ws["baseline"]:
+        raise RuntimeError(
+            f"CBP does not beat baseline: {r_overlap.geomean_ws}")
+    if wall_overlap > 1.5 * wall_serial:
+        raise RuntimeError(
+            f"double-buffered pipeline slower than serial beyond noise: "
+            f"{wall_overlap:.3f}s vs {wall_serial:.3f}s")
+
+    derived = {
+        "n_mixes": cfg.n_mixes, "chunk_size": cfg.chunk_size,
+        "n_managers": len(cfg.manager_names),
+        "device_dispatches_warm": dispatches,
+        "dispatch_budget": budget,
+        "wall_s_overlap_warm": round(wall_overlap, 3),
+        "wall_s_serial_warm": round(wall_serial, 3),
+        "cbp_geomean_ws": r_overlap.geomean_ws["CBP"],
+        "coverage": r_overlap.coverage,
+        **parity,
+    }
+    derived.update({k: prior[k] for k in FULL_FIELDS if k in prior})
+
+    budget_x = float(os.environ.get("STREAM_BENCH_BUDGET_X", "3.0"))
+    prior_warm = prior.get("wall_s_overlap_warm")
+    comparable = (prior.get("n_mixes") == cfg.n_mixes
+                  and prior.get("chunk_size") == cfg.chunk_size)
+    if prior_warm and comparable and wall_overlap > budget_x * prior_warm:
+        raise RuntimeError(
+            f"stream wall regression: warm {wall_overlap:.2f}s vs "
+            f"recorded {prior_warm:.2f}s (budget {budget_x}x)")
+    emit("stream_bench", wall_overlap, derived)
+
+
+def full(n_mixes: int = 100_000, chunk_size: int = 512,
+         serial_chunks: int = 12) -> None:
+    """The 10^5-mix scale record: bounded memory, overlap margin."""
+    prior = _prior()
+    scenario = StreamScenario(popularity="zipf", diurnal_period_chunks=24,
+                              phase_app_fraction=0.25)
+    cfg = StreamConfig(n_mixes=n_mixes, chunk_size=chunk_size,
+                       managers=("baseline", "CBP"), total_ms=50.0,
+                       seed=11, scenario=scenario)
+    # Serial reference on a sub-stream of identical chunk shape (the full
+    # serial run would double the bench wall for no extra information);
+    # per-chunk walls are compared warm-vs-warm.
+    sub = StreamConfig(n_mixes=serial_chunks * chunk_size,
+                       chunk_size=chunk_size, managers=("baseline", "CBP"),
+                       total_ms=50.0, seed=11, scenario=scenario)
+    run_stream(sub, overlap=False)  # compile warm-up
+    t0 = time.monotonic()
+    run_stream(sub, overlap=False)
+    serial_chunk_s = (time.monotonic() - t0) / sub.n_chunks
+
+    t0 = time.monotonic()
+    report = run_stream(cfg, overlap=True)
+    wall = time.monotonic() - t0
+    overlap_chunk_s = wall / cfg.n_chunks
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    overlap_speedup = serial_chunk_s / overlap_chunk_s
+
+    if report.coverage != 1.0:
+        raise RuntimeError(
+            f"healthy full stream lost coverage: {report.coverage} "
+            f"(quarantined {report.quarantined})")
+    # The double-buffered pipeline hides HOST work (chunk generation,
+    # aggregate folds, checkpoint writes) behind device compute.  On the
+    # CPU backend with a single core there is no spare core to hide it
+    # on — device "compute" and host generation time-slice the same CPU
+    # — so the best possible outcome is a tie; the gate then only
+    # enforces no-regression (the pipeline must not cost wall time).
+    # With >1 core the margin must be real.
+    cores = os.cpu_count() or 1
+    floor = 1.0 if cores > 1 else 0.95
+    if overlap_speedup <= floor:
+        raise RuntimeError(
+            f"double buffering does not beat serial dispatch "
+            f"(floor {floor} at {cores} cores): "
+            f"{serial_chunk_s * 1e3:.1f} ms/chunk serial vs "
+            f"{overlap_chunk_s * 1e3:.1f} ms/chunk overlapped")
+
+    derived = dict(prior)
+    derived.update({
+        "full_n_mixes": n_mixes,
+        "full_chunk_size": chunk_size,
+        "full_wall_s": round(wall, 1),
+        "full_mixes_per_s": round(n_mixes / wall, 1),
+        "full_overlap_speedup": round(overlap_speedup, 3),
+        "full_serial_chunk_s": round(serial_chunk_s, 4),
+        "full_overlap_chunk_s": round(overlap_chunk_s, 4),
+        "full_cores": cores,
+        "full_peak_rss_mb": round(peak_rss_mb, 1),
+        "full_cbp_geomean_ws": report.geomean_ws["CBP"],
+        "full_coverage": report.coverage,
+    })
+    emit("stream_bench", wall, derived)
+
+
+def main(smoke_mode: bool, n_mixes: int = 100_000,
+         chunk_size: int = 512) -> None:
+    if smoke_mode:
+        smoke()
+    else:
+        full(n_mixes, chunk_size)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--mixes", type=int, default=100_000)
+    ap.add_argument("--chunk-size", type=int, default=512)
+    args = ap.parse_args()
+    main(args.smoke, args.mixes, args.chunk_size)

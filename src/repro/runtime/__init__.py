@@ -1,7 +1,18 @@
 from repro.runtime.cbp_runtime import TrainingPlant, plan_matmul_blocks
 from repro.runtime.fault import ElasticMesh, StragglerWatchdog, factorize_mesh
+from repro.runtime.faultinject import (
+    FAULT_KINDS,
+    FaultPlan,
+    FaultSpec,
+    InjectedDispatchError,
+    InjectedFault,
+    InjectedProcessKill,
+    poison_tree,
+)
 
 __all__ = [
     "TrainingPlant", "plan_matmul_blocks", "ElasticMesh",
     "StragglerWatchdog", "factorize_mesh",
+    "FAULT_KINDS", "FaultPlan", "FaultSpec", "InjectedDispatchError",
+    "InjectedFault", "InjectedProcessKill", "poison_tree",
 ]

@@ -16,6 +16,7 @@ logic itself is hardware-independent and fully tested on CPU:
 from __future__ import annotations
 
 import dataclasses
+import statistics
 from typing import List, Optional, Tuple
 
 
@@ -27,20 +28,38 @@ class StragglerEvent:
 
 
 class StragglerWatchdog:
+    """EWMA step-time monitor with a median-seeded warm-up window.
+
+    The baseline is seeded from the *median* of the first ``warmup``
+    observations, never from the first observation alone: step 0 is
+    routinely 10-100x slower than steady state (jit compilation, cold
+    caches), and seeding the EWMA with it would inflate the baseline so
+    far that genuine stragglers later never cross ``threshold x ewma``.
+    ``warmup=1`` reproduces the old seed-from-first-step behaviour.
+    """
+
     def __init__(self, threshold: float = 2.0, alpha: float = 0.1,
-                 quarantine_after: int = 3):
+                 quarantine_after: int = 3, warmup: int = 3):
+        if warmup < 1:
+            raise ValueError(f"warmup must be >= 1, got {warmup}")
         self.threshold = threshold
         self.alpha = alpha
         self.quarantine_after = quarantine_after
+        self.warmup = warmup
         self.ewma: Optional[float] = None
         self.events: List[StragglerEvent] = []
         self._consecutive = 0
+        self._warmup_times: List[float] = []
         self.mitigations = 0
 
     def observe(self, step: int, step_time: float) -> bool:
         """Returns True when mitigation should trigger."""
         if self.ewma is None:
-            self.ewma = step_time
+            # Warm-up window: no baseline yet, nothing can be flagged.
+            self._warmup_times.append(step_time)
+            if len(self._warmup_times) >= self.warmup:
+                self.ewma = statistics.median(self._warmup_times)
+                self._warmup_times.clear()
             return False
         flagged = step_time > self.threshold * self.ewma
         if flagged:

@@ -45,10 +45,16 @@ _STATIC_SEARCH_EXPORTS = (
     "StaticOptions", "StaticSearchResult", "enumerate_grid", "family_grid",
     "search_static",
 )
+_STREAM_EXPORTS = (
+    "CheckpointMismatchError", "NumericalDivergenceError", "RetryPolicy",
+    "StreamAbortedError", "StreamAggregates", "StreamConfig", "StreamReport",
+    "run_stream",
+)
 
 
 def __getattr__(name):
-    if name in ("memsys_jax", "timeline_jax", "static_search"):
+    if name in ("memsys_jax", "timeline_jax", "static_search",
+                "stream_sweep"):
         import importlib
         return importlib.import_module(f"repro.sim.{name}")
     if name in _SWEEP_EXPORTS:
@@ -57,6 +63,10 @@ def __getattr__(name):
     if name in _STATIC_SEARCH_EXPORTS:
         import importlib
         return getattr(importlib.import_module("repro.sim.static_search"),
+                       name)
+    if name in _STREAM_EXPORTS:
+        import importlib
+        return getattr(importlib.import_module("repro.sim.stream_sweep"),
                        name)
     raise AttributeError(f"module 'repro.sim' has no attribute {name!r}")
 
@@ -72,5 +82,6 @@ __all__ = [
     "BatchedCMPPlant", "BatchedCoordinator", "SweepResult",
     "baseline_ipc_batched", "run_sweep",
     *_STATIC_SEARCH_EXPORTS,
+    *_STREAM_EXPORTS,
     "WORKLOADS", "random_mixes", "random_workloads",
 ]

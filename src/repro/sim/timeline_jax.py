@@ -579,6 +579,41 @@ def _pad_axis(tree: dict, axis: int, target: int) -> dict:
     return out
 
 
+@dataclasses.dataclass
+class PendingTimelines:
+    """An in-flight stacked-timeline dispatch (asynchronous handle).
+
+    The device program is already enqueued when this object exists;
+    ``device_results`` holds per-spec dicts of *device* arrays.  Nothing
+    blocks until :meth:`result` performs the device->host transfer, so a
+    caller can overlap host work (generating the next chunk of a stream)
+    with the device computing this one — the double-buffering contract of
+    :mod:`repro.sim.stream_sweep`.
+    """
+
+    device_results: List[dict]      # per-spec {field: (M, n) device array}
+    w_accs: List[float]
+
+    def block_until_ready(self) -> "PendingTimelines":
+        jax.block_until_ready([d for d in self.device_results])
+        return self
+
+    def result(self) -> List[TimelineResult]:
+        """Blocking device->host transfer into :class:`TimelineResult`s."""
+        out = []
+        for w_acc, dev in zip(self.w_accs, self.device_results):
+            host = {k: np.asarray(v) for k, v in dev.items()}
+            out.append(TimelineResult(
+                ipc_acc=host["ipc_acc"],
+                w_acc=w_acc,
+                cache_units=host["cache_units"].astype(np.int64),
+                bandwidth=host["bandwidth"],
+                prefetch_on=host["prefetch_on"],
+                active=host["active"],
+            ))
+        return out
+
+
 def run_timelines(
     apps: Union[AppArrays, dict],
     specs: Sequence[TimelineSpec],
@@ -612,6 +647,44 @@ def run_timelines(
     Returns:
       One :class:`TimelineResult` of host arrays per spec — the only
       device->host transfer of all K timelines.
+    """
+    return run_timelines_async(
+        apps, specs,
+        total_units=total_units,
+        total_bandwidth=total_bandwidth,
+        llc_extra_cycles=llc_extra_cycles,
+        min_ways=min_ways,
+        speedup_threshold=speedup_threshold,
+        min_bandwidth_allocation=min_bandwidth_allocation,
+        atd_decay=atd_decay,
+        bandwidth_delay_decay=bandwidth_delay_decay,
+        iters=iters,
+        shard=shard,
+    ).result()
+
+
+def run_timelines_async(
+    apps: Union[AppArrays, dict],
+    specs: Sequence[TimelineSpec],
+    *,
+    total_units: int,
+    total_bandwidth: float,
+    llc_extra_cycles: float = 0.0,
+    min_ways=4,
+    speedup_threshold=1.05,
+    min_bandwidth_allocation=1.0,
+    atd_decay=0.5,
+    bandwidth_delay_decay=0.5,
+    iters: int = FIXED_POINT_ITERS,
+    shard: Optional[bool] = None,
+) -> PendingTimelines:
+    """:func:`run_timelines` without the blocking device->host transfer.
+
+    Dispatches the stacked program(s) and returns a
+    :class:`PendingTimelines` handle holding device arrays; call
+    ``.result()`` for the host-side :class:`TimelineResult`s.  Argument
+    semantics are identical to :func:`run_timelines` (which is literally
+    this followed by ``.result()``).
     """
     if not specs:
         raise ValueError("need at least one TimelineSpec")
@@ -678,61 +751,54 @@ def run_timelines(
         # every slot of the longest table.  Only the mix axis may shard
         # here (all buckets then share one mesh over one device subset);
         # a sharded manager axis takes the single-bucket path below.
-        out = _run_buckets(
+        return _dispatch_buckets(
             buckets, tables, accum, grid, flags, replicated,
             K, M, grid_shards[1], int(total_units), int(iters))
-    else:
-        kinds, acc, reconf = stack_tables(
-            [tables[i] for i in range(K)], accum)
-        mgr = {"kinds": kinds, "acc": acc, "reconf": reconf, **flags}
-        k_pad = -(-K // grid_shards[0]) * grid_shards[0]
-        m_pad = -(-M // grid_shards[1]) * grid_shards[1]
-        # Pad with copies of the last manager/mix row; sliced off after
-        # the program (padding rows are duplicates, never feed real rows).
-        grid = _pad_axis(_pad_axis(grid, 1, m_pad), 0, k_pad)
-        mgr = _pad_axis(mgr, 0, k_pad)
+    kinds, acc, reconf = stack_tables(
+        [tables[i] for i in range(K)], accum)
+    mgr = {"kinds": kinds, "acc": acc, "reconf": reconf, **flags}
+    k_pad = -(-K // grid_shards[0]) * grid_shards[0]
+    m_pad = -(-M // grid_shards[1]) * grid_shards[1]
+    # Pad with copies of the last manager/mix row; sliced off after
+    # the program (padding rows are duplicates, never feed real rows).
+    grid = _pad_axis(_pad_axis(grid, 1, m_pad), 0, k_pad)
+    mgr = _pad_axis(mgr, 0, k_pad)
 
-        has_sampling = bool(np.isin(kinds, (SAMPLE_OFF, SAMPLE_ON)).any())
-        # The most cache-dynamic managers that ever reallocate on the same
-        # slot — the static bound on mini-greedies per boundary step.
-        cache_dyn_col = flags["cache_dynamic"][:, None]
-        max_realloc = int(
-            (reconf & cache_dyn_col).sum(axis=0).max(initial=0))
-        fn = _compiled_stacked(
-            has_sampling,
-            any(s.cache_dynamic for s in specs),
-            any(s.bandwidth_dynamic for s in specs),
-            max_realloc, int(total_units), int(iters), grid_shards)
-        record_dispatch()
-        with memsys_jax.x64_context():
-            res = {k: np.asarray(v)[:K, :M]
-                   for k, v in fn(grid, mgr, replicated).items()}
-        w_accs = [float(a.sum()) for a in acc]
-        out = {k: {"w_acc": w_accs[k],
-                   **{f: res[f][k] for f in res}} for k in range(K)}
-    return [
-        TimelineResult(
-            ipc_acc=out[k]["ipc_acc"],
-            w_acc=out[k]["w_acc"],
-            cache_units=out[k]["cache_units"].astype(np.int64),
-            bandwidth=out[k]["bandwidth"],
-            prefetch_on=out[k]["prefetch_on"],
-            active=out[k]["active"],
-        )
-        for k in range(K)
-    ]
+    has_sampling = bool(np.isin(kinds, (SAMPLE_OFF, SAMPLE_ON)).any())
+    # The most cache-dynamic managers that ever reallocate on the same
+    # slot — the static bound on mini-greedies per boundary step.
+    cache_dyn_col = flags["cache_dynamic"][:, None]
+    max_realloc = int(
+        (reconf & cache_dyn_col).sum(axis=0).max(initial=0))
+    fn = _compiled_stacked(
+        has_sampling,
+        any(s.cache_dynamic for s in specs),
+        any(s.bandwidth_dynamic for s in specs),
+        max_realloc, int(total_units), int(iters), grid_shards)
+    record_dispatch()
+    with memsys_jax.x64_context():
+        res = fn(grid, mgr, replicated)
+        # Per-spec device-side slices: no transfer, no block — padding
+        # rows fall away exactly as the host-side [:K, :M] slice used to
+        # do.  Sliced inside the x64 context: slicing a sharded float64
+        # result is itself a traced program and must lower at the same
+        # precision the stacked program produced.
+        device_results = [{f: res[f][k, :M] for f in res}
+                          for k in range(K)]
+    w_accs = [float(a.sum()) for a in acc]
+    return PendingTimelines(device_results, w_accs)
 
 
-def _run_buckets(buckets, tables, accum, grid, flags, replicated,
-                 K: int, M: int, mix_shards: int,
-                 total_units: int, iters: int) -> dict:
-    """Execute the stacked set as per-length bucket scans in ONE program.
+def _dispatch_buckets(buckets, tables, accum, grid, flags, replicated,
+                      K: int, M: int, mix_shards: int,
+                      total_units: int, iters: int) -> PendingTimelines:
+    """Dispatch the stacked set as per-length bucket scans in ONE program.
 
     Each bucket stacks only its own tables (:func:`stack_tables` snaps
     reconfigure slots within the bucket) and carries its own static knob
     summary, so e.g. the fully-static bucket drops the ATD precompute and
-    sampling machinery outright.  Returns ``{spec_index: {field: (M, n)}}``
-    host arrays, spec order restored.
+    sampling machinery outright.  Returns a :class:`PendingTimelines`
+    whose per-spec device slices restore spec order.
     """
     m_pad = -(-M // mix_shards) * mix_shards
     statics = []
@@ -762,13 +828,12 @@ def _run_buckets(buckets, tables, accum, grid, flags, replicated,
     record_dispatch()
     with memsys_jax.x64_context():
         outs = fn(tuple(bucket_grids), tuple(bucket_mgrs), replicated)
-    result = {}
-    for idx_g, o in zip(buckets, outs):
-        o = {k: np.asarray(v)[:, :M] for k, v in o.items()}
-        for row, i in enumerate(idx_g):
-            result[i] = {"w_acc": w_accs[i],
-                         **{k: v[row] for k, v in o.items()}}
-    return result
+        # Sliced inside the x64 context — see run_timelines_async.
+        device_results: List[Optional[dict]] = [None] * K
+        for idx_g, o in zip(buckets, outs):
+            for row, i in enumerate(idx_g):
+                device_results[i] = {k: v[row, :M] for k, v in o.items()}
+    return PendingTimelines(device_results, [w_accs[i] for i in range(K)])
 
 
 def run_timeline(

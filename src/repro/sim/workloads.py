@@ -1,16 +1,46 @@
-"""Workload mixes (paper Table 2) and random workload generation (paper §2.3).
+"""Workload mixes (paper Table 2), random generation (§2.3) and the
+streaming scenario service.
 
 Table 2's 14 mixes of 16 applications are transcribed from the paper via the
 abbreviation lists (each row resolves to exactly 16 applications).  The
 random 4-app workloads reproduce the §2.3 potential study setup.
+
+Beyond the paper's 32-mix reports, the streaming sweep service
+(:mod:`repro.sim.stream_sweep`) consumes mixes at 10^5-10^6 scale, which
+this module serves **chunk-wise** so no run ever materializes a giant
+Python list-of-lists:
+
+* :func:`mix_index_chunk` — one ``(chunk_size, apps_per_mix)`` int32 array
+  of app indices per chunk, derived from ``(seed, chunk_index)`` alone, so
+  any chunk regenerates independently (that statelessness is what makes
+  checkpoint/resume of a stream bit-exact — no RNG state threads between
+  chunks).
+* :func:`params_from_indices` — index arrays -> the ``(M, n)``
+  model-parameter dict the batched interval model consumes, via one fancy
+  index into a precomputed per-app parameter matrix (no per-mix Python
+  loop, unlike :func:`repro.sim.apps.stack_mixes`).
+* :class:`StreamScenario` / :func:`scenario_chunk` — the scenario knobs of
+  the streaming service: heavy-tailed (Zipf) mix popularity over a
+  deterministic template catalog, diurnal phases that shift the draw
+  toward cache- vs bandwidth-sensitive classes over a configurable period,
+  and phase-changing applications whose miss curves drift per chunk
+  (per-chunk parameter modulation — the within-timeline analogue rides the
+  PR 5 per-segment ATD weight-coefficient swap).
+
+Seed stability of :func:`random_mixes` and :func:`mix_index_chunk` is
+pinned by golden tests (``tests/test_stream_sweep.py``): checkpoints store
+only ``(seed, cursor)``, so the generators must keep producing identical
+streams across refactors or every saved checkpoint silently goes stale.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import dataclasses
+import math
+from typing import Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
-from repro.sim.apps import ABBREV
+from repro.sim.apps import ABBREV, MODEL_FIELDS, PROFILES
 
 # Paper Table 2, "Benchmarks" column, verbatim abbreviation strings.
 _TABLE2 = {
@@ -102,3 +132,245 @@ def random_mixes(n_mixes: int, apps_per_mix: int = 16, seed: int = 0,
         rng.shuffle(apps)
         mixes.append(apps)
     return mixes
+
+
+# --------------------------------------------------------------------- #
+# Chunk-wise mix generation (the 10^5-10^6 streaming scale)
+# --------------------------------------------------------------------- #
+
+#: (n_apps, len(MODEL_FIELDS)) per-application parameter matrix — the
+#: single fancy-index source for :func:`params_from_indices`.
+from repro.sim.apps import APP_NAMES as _APP_NAMES  # noqa: E402
+
+_PARAM_MATRIX = np.array(
+    [[getattr(PROFILES[name], field) for field in MODEL_FIELDS]
+     for name in _APP_NAMES], dtype=np.float64)
+
+#: Class-bucket membership as index arrays (same order as _CLASS_BUCKETS).
+_BUCKET_INDICES = [
+    np.array([_APP_NAMES.index(a) for a in bucket], dtype=np.int32)
+    for bucket in _CLASS_BUCKETS.values()
+]
+
+#: Cache-sensitive vs bandwidth-sensitive app index sets for the diurnal
+#: phase bias (apps can be in both; the bias re-weights, never excludes).
+_CACHE_SENSITIVE = np.array(
+    sorted({_APP_NAMES.index(a)
+            for key, bucket in _CLASS_BUCKETS.items() if "CS" in key
+            for a in bucket}), dtype=np.int64)
+_BW_SENSITIVE = np.array(
+    sorted({_APP_NAMES.index(a)
+            for key, bucket in _CLASS_BUCKETS.items() if "BS" in key
+            for a in bucket}), dtype=np.int64)
+
+
+def _chunk_rng(seed: int, chunk_idx: int, salt: int = 0):
+    """The chunk's RNG — a pure function of (seed, chunk, salt)."""
+    return np.random.default_rng([int(seed), int(chunk_idx), int(salt)])
+
+
+def _draw_mix_indices(rng, n_mixes: int, apps_per_mix: int, balanced: bool,
+                     fill_p: Optional[np.ndarray] = None) -> np.ndarray:
+    """Vectorized mix drawing -> (n_mixes, apps_per_mix) int32 indices.
+
+    Mirrors :func:`random_mixes`' composition (one app per sensitivity
+    class, then uniform fill, then shuffle) without any Python-level
+    per-mix loop; ``fill_p`` optionally biases the fill draw (the diurnal
+    knob).  NOT stream-compatible with ``random_mixes`` — the chunk form
+    has its own golden test.
+    """
+    n_apps = len(_APP_NAMES)
+    cols: List[np.ndarray] = []
+    if balanced:
+        if apps_per_mix < len(_BUCKET_INDICES):
+            raise ValueError(
+                f"balanced mixes need >= {len(_BUCKET_INDICES)} apps per mix")
+        for bucket in _BUCKET_INDICES:
+            picks = rng.integers(0, len(bucket), size=n_mixes)
+            cols.append(bucket[picks])
+    fill = apps_per_mix - len(cols)
+    if fill > 0:
+        if fill_p is None:
+            filler = rng.integers(0, n_apps, size=(n_mixes, fill))
+        else:
+            filler = rng.choice(n_apps, size=(n_mixes, fill), p=fill_p)
+        cols.append(filler.T)
+    idx = np.vstack(cols).T.astype(np.int32)
+    # Per-row shuffle so class picks don't sit in fixed slots.
+    return rng.permuted(idx, axis=1)
+
+
+def mix_index_chunk(seed: int, chunk_idx: int, chunk_size: int,
+                    apps_per_mix: int = 16,
+                    balanced: bool = True) -> np.ndarray:
+    """One chunk of random mixes as a ``(chunk_size, apps_per_mix)`` int32
+    index array into ``APP_NAMES``.
+
+    Derived from ``(seed, chunk_idx)`` alone: chunk c of a stream is the
+    same array whether the run started cold, resumed from a checkpoint, or
+    regenerated just that chunk — the property the streaming service's
+    bit-identical resume contract rests on.  Seed-stability is pinned by a
+    golden test; changing the draw order here invalidates every
+    checkpointed stream.
+    """
+    rng = _chunk_rng(seed, chunk_idx)
+    return _draw_mix_indices(rng, chunk_size, apps_per_mix, balanced)
+
+
+def iter_mix_index_chunks(n_mixes: int, chunk_size: int, *, seed: int = 0,
+                          apps_per_mix: int = 16,
+                          balanced: bool = True) -> Iterator[np.ndarray]:
+    """Generate ``n_mixes`` mixes as a sequence of index-array chunks.
+
+    The last chunk is truncated to ``n_mixes`` total; peak memory is one
+    chunk, never the stream (10^6 mixes stream through a few MB).
+    """
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    n_chunks = -(-n_mixes // chunk_size)
+    for c in range(n_chunks):
+        chunk = mix_index_chunk(seed, c, chunk_size, apps_per_mix, balanced)
+        remain = n_mixes - c * chunk_size
+        yield chunk[:remain] if remain < chunk_size else chunk
+
+
+def params_from_indices(idx: np.ndarray) -> Dict[str, np.ndarray]:
+    """App-index arrays -> the model-parameter dict (each field (M, n)).
+
+    The dict form feeds :func:`repro.sim.timeline_jax.run_timelines` and
+    :func:`repro.sim.memsys_jax.evaluate` directly (they accept
+    ``AppArrays`` or a params dict); one fancy index replaces
+    ``stack_mixes``' per-mix Python loop, which matters at 10^5+ mixes.
+    """
+    idx = np.asarray(idx)
+    if idx.ndim != 2:
+        raise ValueError(f"expected (n_mixes, apps_per_mix), got {idx.shape}")
+    gathered = _PARAM_MATRIX[idx]        # (M, n, F)
+    return {field: np.ascontiguousarray(gathered[..., j])
+            for j, field in enumerate(MODEL_FIELDS)}
+
+
+def names_from_indices(idx: np.ndarray) -> List[List[str]]:
+    """Index arrays -> name lists (for parity against the list-based API)."""
+    return [[_APP_NAMES[int(i)] for i in row] for row in np.asarray(idx)]
+
+
+# --------------------------------------------------------------------- #
+# Streaming scenario service
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamScenario:
+    """Scenario knobs of the streaming sweep service.
+
+    ``popularity="zipf"`` draws each mix from a deterministic template
+    catalog with Zipf(``zipf_exponent``) rank popularity — the
+    heavy-tailed "many users run few distinct consolidations" regime —
+    instead of fresh i.i.d. mixes.  ``diurnal_period_chunks > 0`` sweeps a
+    sinusoidal phase over the stream that biases the uniform fill draw
+    toward cache-sensitive apps at the peak and bandwidth-sensitive apps
+    in the trough (amplitude in [0, 1]).  ``phase_app_fraction > 0`` makes
+    that fraction of each mix's slots *phase-changing*: their miss-curve
+    parameters drift sinusoidally per chunk (period
+    ``phase_period_chunks``, relative amplitude ``phase_amplitude``) —
+    the cross-chunk face of the paper's time-varying application phases
+    (within one timeline the PR 5 per-segment ATD weight-coefficient swap
+    plays the same trick per segment).
+    """
+
+    apps_per_mix: int = 16
+    balanced: bool = True
+    popularity: str = "uniform"          # "uniform" | "zipf"
+    zipf_exponent: float = 1.2
+    catalog_size: int = 4096
+    diurnal_period_chunks: int = 0       # 0 = no diurnal modulation
+    diurnal_amplitude: float = 0.5
+    phase_app_fraction: float = 0.0      # 0 = no phase-changing apps
+    phase_amplitude: float = 0.25
+    phase_period_chunks: int = 8
+
+    def __post_init__(self):
+        if self.popularity not in ("uniform", "zipf"):
+            raise ValueError(
+                f"unknown popularity model {self.popularity!r}")
+        if not 0.0 <= self.phase_app_fraction <= 1.0:
+            raise ValueError("phase_app_fraction must be in [0, 1]")
+        if not 0.0 <= self.diurnal_amplitude <= 1.0:
+            raise ValueError("diurnal_amplitude must be in [0, 1]")
+        if self.popularity == "zipf" and self.zipf_exponent <= 1.0:
+            raise ValueError("zipf_exponent must be > 1")
+
+
+def _diurnal_fill_p(scenario: StreamScenario,
+                    chunk_idx: int) -> Optional[np.ndarray]:
+    """Fill-draw probabilities for this chunk's diurnal phase (or None)."""
+    if scenario.diurnal_period_chunks <= 0:
+        return None
+    phase = math.sin(
+        2.0 * math.pi * chunk_idx / scenario.diurnal_period_chunks)
+    bias = scenario.diurnal_amplitude * phase
+    w = np.ones(len(_APP_NAMES), dtype=np.float64)
+    # Day (+phase): cache-sensitive demand; night (-phase): bandwidth.
+    w[_CACHE_SENSITIVE] *= 1.0 + max(bias, 0.0)
+    w[_BW_SENSITIVE] *= 1.0 + max(-bias, 0.0)
+    return w / w.sum()
+
+
+def _catalog_rows(scenario: StreamScenario, seed: int,
+                  catalog_ids: np.ndarray) -> np.ndarray:
+    """Template-catalog mixes for ``catalog_ids`` — each row a pure
+    function of (seed, catalog id), generated only for the ids actually
+    drawn (the catalog itself never materializes)."""
+    uniq, inverse = np.unique(catalog_ids, return_inverse=True)
+    rows = np.empty((len(uniq), scenario.apps_per_mix), dtype=np.int32)
+    for j, cid in enumerate(uniq):
+        rng = _chunk_rng(seed, int(cid), salt=0xCA7A)
+        rows[j] = _draw_mix_indices(
+            rng, 1, scenario.apps_per_mix, scenario.balanced)[0]
+    return rows[inverse]
+
+
+def scenario_chunk(scenario: StreamScenario, seed: int, chunk_idx: int,
+                   chunk_size: int) -> Dict[str, np.ndarray]:
+    """One scenario chunk: the model-parameter dict (+ ``mix_indices``).
+
+    Deterministic in ``(scenario, seed, chunk_idx, chunk_size)`` — the
+    streaming service's resume contract.  Returns the params dict of
+    :func:`params_from_indices` with phase-changing drift applied, plus
+    the raw ``(chunk_size, apps_per_mix)`` index array under
+    ``"mix_indices"`` for reporting.
+    """
+    if scenario.popularity == "zipf":
+        rng = _chunk_rng(seed, chunk_idx, salt=0x21BF)
+        ranks = rng.zipf(scenario.zipf_exponent, size=chunk_size)
+        catalog_ids = (ranks - 1) % scenario.catalog_size
+        idx = _catalog_rows(scenario, seed, catalog_ids)
+    else:
+        rng = _chunk_rng(seed, chunk_idx)
+        idx = _draw_mix_indices(
+            rng, chunk_size, scenario.apps_per_mix, scenario.balanced,
+            fill_p=_diurnal_fill_p(scenario, chunk_idx))
+    params = params_from_indices(idx)
+
+    if scenario.phase_app_fraction > 0.0:
+        # Phase-changing apps: a deterministic subset of slots per mix
+        # drifts its miss curve sinusoidally across chunks.  The drift
+        # multiplies mpki_min_alloc/mpki_floor (pressure swells and
+        # shrinks) and divides ws_units (the working set sharpens as
+        # pressure peaks); parameters stay strictly positive.
+        sel_rng = _chunk_rng(seed, 0, salt=0xFA5E)
+        n = scenario.apps_per_mix
+        n_phase = max(1, int(round(scenario.phase_app_fraction * n)))
+        slots = sel_rng.permutation(n)[:n_phase]
+        offsets = sel_rng.uniform(0.0, 2.0 * math.pi, size=n_phase)
+        drift = scenario.phase_amplitude * np.sin(
+            2.0 * math.pi * chunk_idx / scenario.phase_period_chunks
+            + offsets)
+        factor = np.ones(n, dtype=np.float64)
+        factor[slots] = 1.0 + drift
+        params["mpki_min_alloc"] = params["mpki_min_alloc"] * factor
+        params["mpki_floor"] = params["mpki_floor"] * factor
+        params["ws_units"] = params["ws_units"] / factor
+    params["mix_indices"] = idx
+    return params

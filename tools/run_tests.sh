@@ -10,7 +10,11 @@
 # batched-vs-numpy parity spot checks and the min-of-2 warm wall record —
 # plus the serving-engine smoke (benchmarks/serving_bench.py --smoke):
 # one-dispatch-per-reconfig-interval budget and the jit-vs-host-loop
-# tokens/sec record, warm wall gated against the committed JSON.
+# tokens/sec record, warm wall gated against the committed JSON — plus
+# the streaming-service smoke (benchmarks/stream_bench.py --smoke):
+# resume-parity gate (injected dispatch failure retried, NaN-poisoned
+# chunk quarantined, mid-run kill + resume -> bit-identical aggregates)
+# and the 3-dispatches-per-chunk budget.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -31,4 +35,5 @@ if [ "$SMOKE" = "1" ]; then
   timeout 120 python -m benchmarks.sweep_smoke
   timeout 180 python -m benchmarks.fig5_smoke
   timeout 180 python -m benchmarks.serving_bench --smoke
+  timeout 300 python -m benchmarks.stream_bench --smoke
 fi
