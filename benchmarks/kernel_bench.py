@@ -115,6 +115,101 @@ def lookahead_bench() -> None:
     emit("kernel_lookahead", t.seconds, rows)
 
 
+def kernel_block_plan_bench() -> None:
+    """UCP-planned block knobs vs the kernels' signature defaults.
+
+    ``plan_kernel_blocks`` runs the Lookahead VMEM partitioner over every
+    kernel under ``src/repro/kernels`` in ONE device dispatch (the batched
+    grouped greedy), then each kernel executes (interpret mode) with the
+    planned blocks and with its defaults.  The record pins the chosen
+    blocks, the dispatch budget, and planned-vs-reference correctness.
+    """
+    from repro.core.dispatch import (device_dispatches,
+                                     reset_device_dispatches)
+    from repro.runtime.cbp_runtime import plan_kernel_blocks
+
+    # Constrained VMEM budgets (vs the 16 MiB default) so the Lookahead
+    # partitioner has a real decision to make instead of maxing every
+    # tile; two budget tiers also exercise the grouped planner's
+    # multi-capacity path (still one dispatch).
+    specs = [
+        {"kernel": "cbp_matmul", "m": 512, "n": 512, "k": 512,
+         "dtype_bytes": 4, "vmem_budget": 768 * 1024},
+        {"kernel": "flash_attention", "seq_q": 512, "seq_kv": 512,
+         "head_dim": 64, "dtype_bytes": 4, "vmem_budget": 768 * 1024},
+        {"kernel": "flash_decode", "seq_kv": 2048, "head_dim": 64,
+         "dtype_bytes": 4, "vmem_budget": 384 * 1024},
+        {"kernel": "ssd_scan", "seq_len": 512, "state_dim": 32,
+         "dtype_bytes": 4, "vmem_budget": 384 * 1024},
+    ]
+    reset_device_dispatches()
+    planned = plan_kernel_blocks(specs)
+    plan_dispatches = device_dispatches()
+    if plan_dispatches != 1:
+        raise RuntimeError(
+            f"plan_kernel_blocks took {plan_dispatches} dispatches for "
+            f"{len(specs)} kernels; the batched planner contract is 1")
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 12)
+    a = jax.random.normal(ks[0], (512, 512), jnp.float32)
+    bmat = jax.random.normal(ks[1], (512, 512), jnp.float32)
+    q, k, v = (jax.random.normal(s, (1, 4, 512, 64), jnp.float32)
+               for s in ks[2:5])
+    dq = jax.random.normal(ks[5], (4, 8, 64))
+    kc = jax.random.normal(ks[6], (4, 8, 2048, 64))
+    vc = jax.random.normal(ks[7], (4, 8, 2048, 64))
+    b, s, h, p, n = 1, 512, 4, 16, 32
+    x = jax.random.normal(ks[8], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[9], (b, s, h))) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[10], (h,)) * 0.3)
+    Bm = jax.random.normal(ks[11], (b, s, n)) * 0.5
+    Cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+
+    defaults = {
+        "cbp_matmul": {"block_m": 128, "block_n": 128, "block_k": 128},
+        "flash_attention": {"block_q": 128, "block_kv": 128},
+        "flash_decode": {"block_kv": 512},
+        "ssd_scan": {"chunk": 128},
+    }
+    runners = {
+        "cbp_matmul": (
+            lambda kw: cbp_matmul(a, bmat, interpret=True, **kw),
+            lambda: a @ bmat),
+        "flash_attention": (
+            lambda kw: flash_attention_fwd(q, k, v, causal=True,
+                                           interpret=True, **kw),
+            lambda: attention_ref(q, k, v, causal=True)),
+        "flash_decode": (
+            lambda kw: flash_decode(dq, kc, vc, jnp.asarray(2048),
+                                    interpret=True, **kw),
+            None),  # reference = the default-block run
+        "ssd_scan": (
+            lambda kw: ssd_scan(x, dt, A, Bm, Cm, interpret=True, **kw),
+            lambda: ssd_ref(x, dt, A, Bm, Cm)),
+    }
+    rows = {"plan_dispatches": plan_dispatches}
+    with timer() as t:
+        for spec, knobs in zip(specs, planned):
+            name = spec["kernel"]
+            fn, ref_fn = runners[name]
+            t0 = time.monotonic()
+            out_default = jax.block_until_ready(fn(defaults[name]))
+            default_ms = 1e3 * (time.monotonic() - t0)
+            t0 = time.monotonic()
+            out_planned = jax.block_until_ready(fn(knobs))
+            planned_ms = 1e3 * (time.monotonic() - t0)
+            ref = ref_fn() if ref_fn is not None else out_default
+            err = float(jnp.abs(out_planned - ref).max())
+            rows[name] = {
+                "planned": knobs,
+                "default": defaults[name],
+                "planned_ms": round(planned_ms),
+                "default_ms": round(default_ms),
+                "max_err": f"{err:.1e}",
+            }
+    emit("kernel_blocks", t.seconds, rows)
+
+
 def cbp_matmul_knob_sweep() -> None:
     """The cache(VMEM)-partitioning knob sweep: HBM traffic model vs block
     shape — the quantity the UCP planner optimizes."""

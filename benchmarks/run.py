@@ -52,6 +52,7 @@ def main() -> None:
         kernel_bench,
         paper_figs,
         roofline_report,
+        runtime_bench,
         scenario_report,
         serving_bench,
         stream_bench,
@@ -77,6 +78,10 @@ def main() -> None:
         # streaming sweep service: --quick runs the CI smoke (resume
         # parity + dispatch budget), default the 10^5-mix scale record.
         "stream_bench": (lambda: stream_bench.main(smoke_mode=args.quick)),
+        # runtime bindings: fused TrainingPlant one-dispatch + bit-parity
+        # vs the host coordinator, batched block-planner parity; default
+        # adds the 400 ms / 12-client scale record.
+        "runtime_bench": (lambda: runtime_bench.main(smoke_mode=args.quick)),
         "fig9_10": paper_figs.fig9_fig10_main,
         "fig11": paper_figs.fig11_case_study,
         "fig12": paper_figs.fig12_sensitivity,
@@ -86,6 +91,7 @@ def main() -> None:
         "kernel_flash_decode": kernel_bench.flash_decode_bench,
         "kernel_ssd_scan": kernel_bench.ssd_scan_bench,
         "kernel_cbp_matmul": kernel_bench.cbp_matmul_knob_sweep,
+        "kernel_blocks": kernel_bench.kernel_block_plan_bench,
         "kernel_lookahead": kernel_bench.lookahead_bench,
         "roofline": roofline_report.roofline_report,
     }

@@ -1,0 +1,192 @@
+"""Runtime-binding smoke: fused TrainingPlant + batched block planner.
+
+The CI gate for the PR that closed the runtime-binding loop (ROADMAP
+item 5): the training-plant coordinator and the kernel block planner were
+the last subsystems outside the <=-few-dispatches contract.  Gates (all
+``RuntimeError`` — never bare asserts, so ``python -O`` cannot skip them):
+
+* **fused dispatch budget** — a full Fig. 8 knob schedule through
+  :func:`repro.runtime.plant_jax.run_fused_schedule` (cache Lookahead,
+  Algorithm-1 bandwidth, Algorithm-2 A/B throttling) costs exactly ONE
+  recorded device program per run (counter:
+  :func:`repro.core.device_dispatches`), not one per interval;
+* **fused bit-parity** — the fused trajectory equals the host
+  ``CBPCoordinator`` golden (:func:`host_reference_run`) bit for bit on
+  every knob field, the same contract ``tests/test_plant_jax.py`` pins;
+* **planner dispatch + parity** — :func:`plan_matmul_blocks_batched`
+  plans a fleet of shapes (square, rectangular, prime/odd, sub-8) in ONE
+  device call and returns blocks identical to the scalar numpy planner;
+* **wall trajectory** — warm fused wall vs the committed
+  ``results/bench/runtime_bench.json`` record, slack
+  ``RUNTIME_BENCH_BUDGET_X`` (default 3x; the shard8 CI job widens it),
+  checked BEFORE the record refreshes.
+
+    PYTHONPATH=src python -m benchmarks.runtime_bench [--smoke]
+
+(The full mode adds a longer-horizon scale record on top of the same
+gates; ``--smoke`` is what CI and ``tools/run_tests.sh --smoke`` run.)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit
+from repro.core import CBPParams, device_dispatches
+from repro.runtime.cbp_runtime import (
+    plan_matmul_blocks,
+    plan_matmul_blocks_batched,
+)
+from repro.runtime.plant_jax import host_reference_run, run_fused_schedule
+from repro.train.plant_model import make_stream_plant_model
+
+#: Knob-trajectory fields under the bit-parity gate.
+FIELDS = ("kinds", "t_ms", "duration_ms", "cache_units", "bandwidth",
+          "prefetch_on", "ipc", "queuing_delay_ns")
+
+#: Planner gate shapes: square, large, rectangular, prime/odd, sub-8.
+PLAN_SHAPES = ((512, 512, 512), (1024, 1024, 1024), (384, 768, 96),
+               (97, 53, 160), (6, 4, 512))
+
+SMOKE_SHAPE = dict(n_clients=4, total_units=48, total_bandwidth=64.0,
+                   total_ms=60.0)
+FULL_SHAPE = dict(n_clients=12, total_units=96, total_bandwidth=128.0,
+                  total_ms=400.0)
+
+#: Fields owned by the full mode, preserved across smoke refreshes.
+FULL_FIELDS = ("full_n_clients", "full_total_ms", "full_segments",
+               "full_wall_s_fused_warm")
+
+
+def _prior() -> dict:
+    path = RESULTS / "runtime_bench.json"
+    if not path.exists():
+        return {}
+    try:
+        return json.loads(path.read_text()).get("derived", {})
+    except (ValueError, OSError):
+        return {}
+
+
+def _fused_gate(shape: dict, params: CBPParams) -> dict:
+    """One-dispatch + bit-parity gate at ``shape``; returns the record."""
+    step_fn, step_model = make_stream_plant_model(
+        shape["n_clients"], shape["total_units"], shape["total_bandwidth"])
+    kw = dict(shape, params=params)
+    host = host_reference_run(step_fn, **kw)
+    run_fused_schedule(step_model, **kw)          # jit warm-up
+    before = device_dispatches()
+    fused = run_fused_schedule(step_model, **kw)
+    dispatches = device_dispatches() - before
+    if dispatches != 1:
+        raise RuntimeError(
+            f"fused TrainingPlant schedule cost {dispatches} device "
+            f"programs; the contract is ONE per run (was one per "
+            f"interval before the fused port)")
+    # Best-of-3 warm wall: the fused run is milliseconds, so a single
+    # sample would make the CI wall gate jitter-bound.
+    wall = float("inf")
+    for _ in range(3):
+        t0 = time.monotonic()
+        run_fused_schedule(step_model, **kw)
+        wall = min(wall, time.monotonic() - t0)
+    for field in FIELDS:
+        a, b = getattr(fused, field), getattr(host, field)
+        if a.dtype != b.dtype or not np.array_equal(a, b):
+            raise RuntimeError(
+                f"fused-vs-host bit-parity broken on {field!r}: the "
+                f"fused scan drifted off the CBPCoordinator golden")
+    return {
+        "segments": int(len(fused.kinds)),
+        "wall_s_fused_warm": round(wall, 4),
+        "dispatches_per_run": dispatches,
+    }
+
+
+def _planner_gate() -> dict:
+    """Batched planner: one dispatch, blocks identical to scalar numpy."""
+    golden = [plan_matmul_blocks(m, n, k, allocator_backend="numpy")
+              for m, n, k in PLAN_SHAPES]
+    plan_matmul_blocks_batched(list(PLAN_SHAPES))  # jit warm-up
+    before = device_dispatches()
+    t0 = time.monotonic()
+    batched = plan_matmul_blocks_batched(list(PLAN_SHAPES))
+    wall = time.monotonic() - t0
+    dispatches = device_dispatches() - before
+    if dispatches != 1:
+        raise RuntimeError(
+            f"batched block planner cost {dispatches} device programs "
+            f"for {len(PLAN_SHAPES)} shapes; the contract is ONE")
+    if list(batched) != golden:
+        raise RuntimeError(
+            f"batched planner blocks differ from the scalar numpy "
+            f"planner: {list(batched)} != {golden}")
+    return {
+        "planner_shapes": len(PLAN_SHAPES),
+        "planner_dispatches": dispatches,
+        "planner_wall_s_warm": round(wall, 4),
+        "planner_blocks": [list(b) for b in batched],
+    }
+
+
+def smoke() -> None:
+    prior = _prior()
+    params = CBPParams(reconfiguration_interval_ms=10.0, min_ways=2,
+                       min_bandwidth_allocation=2.0)
+    fused = _fused_gate(SMOKE_SHAPE, params)
+    planner = _planner_gate()
+
+    wall = fused["wall_s_fused_warm"]
+    budget_x = float(os.environ.get("RUNTIME_BENCH_BUDGET_X", "3.0"))
+    prior_warm = prior.get("wall_s_fused_warm")
+    comparable = (prior.get("n_clients") == SMOKE_SHAPE["n_clients"]
+                  and prior.get("segments") == fused["segments"])
+    if prior_warm and comparable and wall > budget_x * prior_warm:
+        raise RuntimeError(
+            f"fused TrainingPlant wall regression: warm {wall:.4f}s vs "
+            f"recorded {prior_warm:.4f}s (budget {budget_x}x)")
+
+    derived = {
+        "n_clients": SMOKE_SHAPE["n_clients"],
+        "total_units": SMOKE_SHAPE["total_units"],
+        "total_ms": SMOKE_SHAPE["total_ms"],
+        **fused,
+        **planner,
+    }
+    derived.update({k: prior[k] for k in FULL_FIELDS if k in prior})
+    emit("runtime_bench", wall, derived)
+
+
+def full() -> None:
+    """Smoke gates plus the longer-horizon scale record (400 ms, n=12)."""
+    smoke()
+    prior = _prior()
+    params = CBPParams(reconfiguration_interval_ms=5.0, min_ways=2,
+                       min_bandwidth_allocation=1.0)
+    fused = _fused_gate(FULL_SHAPE, params)
+    derived = dict(prior)
+    derived.update({
+        "full_n_clients": FULL_SHAPE["n_clients"],
+        "full_total_ms": FULL_SHAPE["total_ms"],
+        "full_segments": fused["segments"],
+        "full_wall_s_fused_warm": fused["wall_s_fused_warm"],
+    })
+    emit("runtime_bench", fused["wall_s_fused_warm"], derived)
+
+
+def main(smoke_mode: bool = True) -> None:
+    if smoke_mode:
+        smoke()
+    else:
+        full()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(args.smoke)

@@ -37,7 +37,14 @@ from repro.core.prefetch_controller import (
     throttle_decision,
     throttle_decision_jax,
 )
-from repro.core.types import Allocation, CBPParams, IntervalStats, Mode, PrefetchMode
+from repro.core.types import (
+    Allocation,
+    CBPParams,
+    IntervalStats,
+    Mode,
+    PrefetchMode,
+    ScheduleConfigError,
+)
 
 __all__ = [
     "SampledATD",
@@ -66,4 +73,5 @@ __all__ = [
     "IntervalStats",
     "Mode",
     "PrefetchMode",
+    "ScheduleConfigError",
 ]

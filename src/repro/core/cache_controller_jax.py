@@ -327,6 +327,80 @@ def lookahead_allocate(
     return out.reshape(batch_shape + (n,)).astype(np.int64)
 
 
+@functools.lru_cache(maxsize=None)
+def _compiled_grouped(total_units_key: tuple, backend: str):
+    """One jitted program running a greedy per capacity group.
+
+    Groups with different ``total_units`` cannot share one ``_greedy_loop``
+    call (the capacity is a static argument and fixes the curve width), but
+    they CAN share one program: the per-group greedies are independent
+    subgraphs of a single jit, so a multi-capacity plan costs one dispatch
+    — the same bucketing trick as ``timeline_jax._compiled_buckets``.
+    """
+
+    def run(groups):
+        outs = []
+        for (curves, mins), units in zip(groups, total_units_key):
+            B, n, _ = curves.shape
+            outs.append(_greedy_core(
+                curves, mins, jnp.ones((B, n), dtype=bool),
+                jnp.full((B,), units, dtype=jnp.int64),
+                total_units=units, backend=backend))
+        return tuple(outs)
+
+    return jax.jit(run)
+
+
+def lookahead_allocate_grouped(
+    curve_groups,
+    total_units_list,
+    min_units=4,
+    backend=None,
+):
+    """Batched Lookahead over groups with *different* capacities — one call.
+
+    Args:
+      curve_groups: sequence of ``(B_g, n_g, U_g + 1)`` float64 curve
+        batches, one per capacity group.
+      total_units_list: per-group capacity (``U_g``), same length.
+      min_units: scalar floor, or a sequence of per-group scalars /
+        ``(B_g,)`` arrays.
+      backend: as in :func:`lookahead_allocate`.
+
+    Returns:
+      List of ``(B_g, n_g)`` int64 allocations, bit-identical per row to
+      the scalar numpy reference.  The whole multi-group plan is ONE device
+      dispatch (counter-gated by the runtime smoke) — this is what lets
+      ``plan_matmul_blocks_batched`` plan shapes with different VMEM
+      budgets in a single program.
+    """
+    if len(curve_groups) != len(total_units_list):
+        raise ValueError("one total_units per curve group required")
+    if len(curve_groups) == 0:
+        raise ValueError("empty group list")
+    if np.isscalar(min_units):
+        min_units = [min_units] * len(curve_groups)
+    prepared = []
+    for curves, units, mus in zip(curve_groups, total_units_list, min_units):
+        curves = np.asarray(curves, dtype=np.float64)
+        if curves.ndim != 3:
+            raise ValueError("grouped curves must be (B, n, U + 1)")
+        B, n, _ = curves.shape
+        mus = np.broadcast_to(np.asarray(mus, dtype=np.int64), (B,))
+        _validate(curves, int(units), mus)
+        prepared.append((curves, int(units), mus))
+    backend = _resolve_backend(backend)
+    fn = _compiled_grouped(tuple(u for _, u, _m in prepared), backend)
+    record_dispatch()
+    with _x64_context():
+        outs = fn(tuple((jnp.asarray(c, dtype=jnp.float64), jnp.asarray(m))
+                        for c, _u, m in prepared))
+        outs = [np.asarray(o) for o in outs]
+    for out, (_c, units, _m) in zip(outs, prepared):
+        assert (out.sum(axis=-1) == units).all()
+    return [o.astype(np.int64) for o in outs]
+
+
 def lookahead_allocate_masked(
     utility_curves,
     total_units: int,

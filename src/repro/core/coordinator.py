@@ -30,7 +30,14 @@ from repro.core.atd import SampledATD
 from repro.core.bandwidth_controller import BandwidthController
 from repro.core.cache_controller import CacheController
 from repro.core.prefetch_controller import PrefetchController
-from repro.core.types import Allocation, CBPParams, IntervalStats, Mode, PrefetchMode
+from repro.core.types import (
+    Allocation,
+    CBPParams,
+    IntervalStats,
+    Mode,
+    PrefetchMode,
+    ScheduleConfigError,
+)
 
 
 class Plant(Protocol):
@@ -85,7 +92,21 @@ def fig8_schedule(total_ms: float, params: CBPParams,
     non-boundary durations sum exactly to ``total_ms`` whenever each
     reconfiguration interval can contain its sampling overhead (see
     ``tests/test_coordinator_timeline.py``).
+
+    :class:`~repro.core.types.CBPParams` rejects configurations whose
+    sampling overhead exceeds the interval at construction; the check is
+    repeated here because params are mutable dataclasses and a drifted
+    schedule is silent otherwise.
     """
+    if prefetch_dynamic and (params.reconfiguration_interval_ms
+                             < 2.0 * params.prefetch_sampling_period_ms):
+        raise ScheduleConfigError(
+            "reconfiguration_interval_ms "
+            f"({params.reconfiguration_interval_ms!r}) < 2 * "
+            "prefetch_sampling_period_ms "
+            f"({params.prefetch_sampling_period_ms!r}): the sampling "
+            "overhead does not fit in the interval, so the 'run' segment "
+            "would be dropped and reconfigure boundaries would drift")
     segments: List[ScheduleSegment] = []
     t = 0.0
     first = True

@@ -14,6 +14,19 @@ from typing import Optional
 import numpy as np
 
 
+class ScheduleConfigError(ValueError):
+    """Raised when :class:`CBPParams` cannot form a Fig. 8 timeline.
+
+    The Fig. 8 schedule spends ``2 * prefetch_sampling_period_ms`` of every
+    reconfiguration interval on the A/B prefetch samples; if the interval is
+    shorter than that, the "run" segment's duration goes negative, gets
+    silently dropped, and the reconfigure boundaries drift off interval
+    multiples — the host loop and the fused/stacked segment tables then
+    disagree.  Rejecting the configuration up front keeps every backend on
+    the same timeline.
+    """
+
+
 class Mode(enum.Enum):
     """How one of the three resources is managed (paper Table 3)."""
 
@@ -101,3 +114,23 @@ class CBPParams:
     min_ways: int = 4                       # allocation quanta floor
     atd_decay: float = 0.5                  # ATD scale at reconfiguration
     bandwidth_delay_decay: float = 0.5      # queuing-delay accumulator decay
+
+    def __post_init__(self):
+        if self.reconfiguration_interval_ms <= 0:
+            raise ScheduleConfigError(
+                "reconfiguration_interval_ms must be positive, got "
+                f"{self.reconfiguration_interval_ms!r}")
+        if self.prefetch_sampling_period_ms <= 0:
+            raise ScheduleConfigError(
+                "prefetch_sampling_period_ms must be positive, got "
+                f"{self.prefetch_sampling_period_ms!r}")
+        if (self.reconfiguration_interval_ms
+                < 2.0 * self.prefetch_sampling_period_ms):
+            raise ScheduleConfigError(
+                "reconfiguration_interval_ms "
+                f"({self.reconfiguration_interval_ms!r}) must cover both "
+                "prefetch samples: it has to be >= 2 * "
+                "prefetch_sampling_period_ms "
+                f"({self.prefetch_sampling_period_ms!r}); a shorter interval "
+                "drops the 'run' segment and drifts the reconfigure "
+                "boundaries off interval multiples")

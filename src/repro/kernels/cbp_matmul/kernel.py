@@ -45,13 +45,23 @@ def _mm_kernel(a_ref, b_ref, o_ref, acc_scr):
 def cbp_matmul(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
                block_n: int = 128, block_k: int = 128,
                interpret: bool = False) -> jnp.ndarray:
-    """(M, K) @ (K, N) with explicit VMEM tiling."""
+    """(M, K) @ (K, N) with explicit VMEM tiling.
+
+    Dims need not divide the blocks: ``plan_matmul_blocks`` is pad-aware
+    (a prime/odd dim gets a block tiling ``ceil(dim / block) * block``),
+    so operands zero-pad up to the block multiple here — exact for a
+    matmul — and the result slices back to ``(M, N)``.
+    """
     m, k = a.shape
     k2, n = b.shape
     assert k == k2
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    grid = (m // block_m, n // block_n, k // block_k)
-    return pl.pallas_call(
+    pad_m, pad_n, pad_k = -m % block_m, -n % block_n, -k % block_k
+    if pad_m or pad_n or pad_k:
+        a = jnp.pad(a, ((0, pad_m), (0, pad_k)))
+        b = jnp.pad(b, ((0, pad_k), (0, pad_n)))
+    mp, np_, kp = m + pad_m, n + pad_n, k + pad_k
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+    out = pl.pallas_call(
         _mm_kernel,
         grid=grid,
         in_specs=[
@@ -59,10 +69,11 @@ def cbp_matmul(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 128,
             pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(a, b)
+    return out[:m, :n] if (pad_m or pad_n) else out
 
 
 def vmem_footprint_bytes(block_m: int, block_n: int, block_k: int,

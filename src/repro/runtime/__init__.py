@@ -1,4 +1,9 @@
-from repro.runtime.cbp_runtime import TrainingPlant, plan_matmul_blocks
+from repro.runtime.cbp_runtime import (
+    TrainingPlant,
+    plan_kernel_blocks,
+    plan_matmul_blocks,
+    plan_matmul_blocks_batched,
+)
 from repro.runtime.fault import ElasticMesh, StragglerWatchdog, factorize_mesh
 from repro.runtime.faultinject import (
     FAULT_KINDS,
@@ -9,10 +14,19 @@ from repro.runtime.faultinject import (
     InjectedProcessKill,
     poison_tree,
 )
+from repro.runtime.plant_jax import (
+    FusedTrainingPlant,
+    PlantScheduleResult,
+    host_reference_run,
+    run_fused_schedule,
+)
 
 __all__ = [
-    "TrainingPlant", "plan_matmul_blocks", "ElasticMesh",
-    "StragglerWatchdog", "factorize_mesh",
+    "TrainingPlant", "plan_kernel_blocks", "plan_matmul_blocks",
+    "plan_matmul_blocks_batched",
+    "FusedTrainingPlant", "PlantScheduleResult", "host_reference_run",
+    "run_fused_schedule",
+    "ElasticMesh", "StragglerWatchdog", "factorize_mesh",
     "FAULT_KINDS", "FaultPlan", "FaultSpec", "InjectedDispatchError",
     "InjectedFault", "InjectedProcessKill", "poison_tree",
 ]

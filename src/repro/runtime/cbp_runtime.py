@@ -56,42 +56,172 @@ def _tile_utility_curves(m: int, n: int, k: int, dtype_bytes: int,
     return np.stack([util_a, util_b, util_acc])
 
 
+_PLAN_UNIT = 8192                                 # 8 KiB VMEM "ways"
+_PLAN_MIN_UNITS = 2
+
+
+def _round_up(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def _snap_block(raw: float, dim: int, *, align: int = 8,
+                mxu: Optional[int] = 128) -> int:
+    """Snap a budget-derived tile size to the largest feasible aligned block.
+
+    Pad-aware: a block is *feasible* when it either divides ``dim`` exactly
+    (zero padding) or is a multiple of ``align`` tiling the padded extent
+    ``ceil(dim / block) * block`` (the caller — or Mosaic's trailing-tile
+    masking — pads the operand).  Among feasible candidates the one with the
+    smallest padded extent wins, the larger block on ties, so exact aligned
+    divisors always beat padding and prime/odd dims (no aligned divisor)
+    keep a full-width aligned block instead of collapsing to 1-wide tiles.
+    """
+    if dim <= align:
+        return dim                    # whole extent: one sublane-padded tile
+    ext = _round_up(dim, align)
+    p = 2 ** int(np.floor(np.log2(max(raw, 1))))
+    b = int(min(max(p, align), ext))
+    # hardware alignment: MXU wants multiples of 128 when possible
+    if mxu is not None and ext >= mxu and b >= mxu // 2:
+        b = max(b, mxu)
+    if dim % b == 0:
+        return b
+    cands = [b] + [d for d in range(align, b + 1, align) if dim % d == 0]
+    return min(cands, key=lambda c: (_round_up(dim, c), -c))
+
+
+def _plan_from_alloc(m: int, n: int, k: int, alloc: np.ndarray,
+                     dtype_bytes: int) -> Tuple[int, int, int]:
+    """Shared alloc -> (block_m, block_n, block_k) snap, so the scalar and
+    batched planners cannot disagree given identical allocations."""
+    block_m = _snap_block(alloc[0] * _PLAN_UNIT / (2 * 128 * dtype_bytes), m)
+    block_n = _snap_block(alloc[1] * _PLAN_UNIT / (2 * 128 * dtype_bytes), n)
+    block_k = _snap_block(alloc[2] * _PLAN_UNIT / (256 * dtype_bytes), k,
+                          mxu=None)
+    return max(block_m, 1), max(block_n, 1), max(block_k, 1)
+
+
 def plan_matmul_blocks(m: int, n: int, k: int, *, dtype_bytes: int = 2,
                        vmem_budget: int = VMEM_BYTES // 8,
                        allocator_backend: str = "numpy",
                        ) -> Tuple[int, int, int]:
     """UCP-allocate the VMEM budget among A/B/ACC tiles -> block sizes.
 
-    ``allocator_backend="jax"`` runs the Lookahead greedy on device
-    (useful when planning many matmul shapes in one batch is added later);
-    both backends return identical blocks (bit-parity contract).
+    ``allocator_backend="jax"`` runs the Lookahead greedy on device; both
+    backends return identical blocks (bit-parity contract).  To plan many
+    shapes in one device call use :func:`plan_matmul_blocks_batched`.
+
+    Blocks are pad-aware (see :func:`_snap_block`): for dims with no
+    aligned divisor the returned block tiles ``ceil(dim / block) * block``
+    and the caller pads the operand to that extent.
     """
-    unit = 8192                                   # 8 KiB VMEM "ways"
-    total_units = max(vmem_budget // unit, 6)
-    curves = _tile_utility_curves(m, n, k, dtype_bytes, unit, total_units)
+    total_units = max(vmem_budget // _PLAN_UNIT, 6)
+    curves = _tile_utility_curves(m, n, k, dtype_bytes, _PLAN_UNIT,
+                                  total_units)
     alloc = CacheController(
-        total_units, min_units=2,
+        total_units, min_units=_PLAN_MIN_UNITS,
         backend=allocator_backend).allocate(curves)
+    return _plan_from_alloc(m, n, k, alloc, dtype_bytes)
 
-    def _pow2_clamp(x, lo, hi):
-        p = 2 ** int(np.floor(np.log2(max(x, 1))))
-        return int(min(max(p, lo), hi))
 
-    block_m = _pow2_clamp(alloc[0] * unit / (2 * 128 * dtype_bytes), 8, m)
-    block_n = _pow2_clamp(alloc[1] * unit / (2 * 128 * dtype_bytes), 8, n)
-    block_k = _pow2_clamp(alloc[2] * unit / (256 * dtype_bytes), 8, k)
-    # hardware alignment: MXU wants multiples of 128 when possible
-    if m >= 128:
-        block_m = max(block_m, 128) if block_m >= 64 else block_m
-    if n >= 128:
-        block_n = max(block_n, 128) if block_n >= 64 else block_n
-    while m % block_m:
-        block_m //= 2
-    while n % block_n:
-        block_n //= 2
-    while k % block_k:
-        block_k //= 2
-    return max(block_m, 1), max(block_n, 1), max(block_k, 1)
+def plan_matmul_blocks_batched(
+    shapes: List[Tuple[int, int, int]], *,
+    dtype_bytes=2,
+    vmem_budget=VMEM_BYTES // 8,
+    allocator_backend: str = "jax",
+) -> List[Tuple[int, int, int]]:
+    """Plan many ``(m, n, k)`` shapes in ONE device call.
+
+    ``dtype_bytes`` / ``vmem_budget`` may be scalars or per-shape
+    sequences.  Shapes are grouped by capacity (``vmem_budget`` fixes the
+    utility-curve width) and the whole multi-group Lookahead runs as one
+    jitted program (:func:`repro.core.cache_controller_jax.
+    lookahead_allocate_grouped`), so planning a fleet of kernels costs one
+    dispatch instead of one per shape.  Per shape, the returned blocks are
+    identical to :func:`plan_matmul_blocks` (bit-parity contract of the
+    batched greedy; the snap logic is shared).
+
+    ``allocator_backend="numpy"`` falls back to the scalar host planner per
+    shape — the golden reference the parity tests pin the batch against.
+    """
+    B = len(shapes)
+    if B == 0:
+        return []
+    dbs = [int(d) for d in (np.broadcast_to(dtype_bytes, (B,)))]
+    budgets = [int(v) for v in (np.broadcast_to(vmem_budget, (B,)))]
+    if allocator_backend == "numpy":
+        return [plan_matmul_blocks(m, n, k, dtype_bytes=db, vmem_budget=vb,
+                                   allocator_backend="numpy")
+                for (m, n, k), db, vb in zip(shapes, dbs, budgets)]
+
+    from repro.core.cache_controller_jax import lookahead_allocate_grouped
+
+    total_units = [max(vb // _PLAN_UNIT, 6) for vb in budgets]
+    groups: Dict[int, List[int]] = {}
+    for i, units in enumerate(total_units):
+        groups.setdefault(units, []).append(i)
+    keys = sorted(groups)
+    curve_groups = []
+    for units in keys:
+        curve_groups.append(np.stack([
+            _tile_utility_curves(*shapes[i], dbs[i], _PLAN_UNIT, units)
+            for i in groups[units]]))
+    allocs = lookahead_allocate_grouped(
+        curve_groups, keys, min_units=_PLAN_MIN_UNITS,
+        backend=allocator_backend)
+    out: List[Optional[Tuple[int, int, int]]] = [None] * B
+    for units, alloc in zip(keys, allocs):
+        for j, i in enumerate(groups[units]):
+            out[i] = _plan_from_alloc(*shapes[i], alloc[j], dbs[i])
+    return out  # type: ignore[return-value]
+
+
+# Per-kernel mapping of shape dims onto the (m, n, k) tile-utility query
+# and of the planned (block_m, block_n, block_k) back onto the kernel's
+# block knobs.  flash_decode queries with an 8-row Q tile (one padded
+# sublane of queries streams the whole KV); ssd_scan's chunk is both sides
+# of the (chunk x chunk) intra-chunk decay matmul.
+_KERNEL_PLAN_QUERIES: Dict[str, Callable] = {
+    "cbp_matmul": lambda d: (d["m"], d["n"], d["k"]),
+    "flash_attention": lambda d: (d["seq_q"], d["seq_kv"], d["head_dim"]),
+    "flash_decode": lambda d: (8, d["seq_kv"], d["head_dim"]),
+    "ssd_scan": lambda d: (d["seq_len"], d["seq_len"], d["state_dim"]),
+}
+_KERNEL_PLAN_KNOBS: Dict[str, Callable] = {
+    "cbp_matmul": lambda bm, bn, bk: {
+        "block_m": bm, "block_n": bn, "block_k": bk},
+    "flash_attention": lambda bm, bn, bk: {"block_q": bm, "block_kv": bn},
+    "flash_decode": lambda bm, bn, bk: {"block_kv": bn},
+    "ssd_scan": lambda bm, bn, bk: {"chunk": min(bm, bn)},
+}
+
+
+def plan_kernel_blocks(specs: List[Dict], *,
+                       allocator_backend: str = "jax") -> List[Dict]:
+    """Auto-plan block knobs for a fleet of Pallas kernels in one dispatch.
+
+    Each spec is ``{"kernel": <name>, "dtype_bytes": ..,
+    "vmem_budget": .., <dims>}`` where ``<dims>`` are the kernel's shape
+    fields (see ``_KERNEL_PLAN_QUERIES``): ``cbp_matmul`` takes
+    ``m/n/k``, ``flash_attention`` ``seq_q/seq_kv/head_dim``,
+    ``flash_decode`` ``seq_kv/head_dim``, ``ssd_scan``
+    ``seq_len/state_dim``.  Returns one knob dict per spec, planned by a
+    single :func:`plan_matmul_blocks_batched` call.
+    """
+    shapes, dbs, budgets = [], [], []
+    for spec in specs:
+        kern = spec["kernel"]
+        if kern not in _KERNEL_PLAN_QUERIES:
+            raise ValueError(f"unknown kernel {kern!r}; have "
+                             f"{sorted(_KERNEL_PLAN_QUERIES)}")
+        shapes.append(_KERNEL_PLAN_QUERIES[kern](spec))
+        dbs.append(int(spec.get("dtype_bytes", 2)))
+        budgets.append(int(spec.get("vmem_budget", VMEM_BYTES // 8)))
+    blocks = plan_matmul_blocks_batched(
+        shapes, dtype_bytes=dbs, vmem_budget=budgets,
+        allocator_backend=allocator_backend)
+    return [_KERNEL_PLAN_KNOBS[spec["kernel"]](*blk)
+            for spec, blk in zip(specs, blocks)]
 
 
 # ------------------------------------------------------------------ #

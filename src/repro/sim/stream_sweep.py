@@ -465,6 +465,10 @@ class _StreamRunner:
                         cfg.params.min_bandwidth_allocation),
                     atd_decay=cfg.params.atd_decay,
                     bandwidth_delay_decay=cfg.params.bandwidth_delay_decay,
+                    # Chunk c's grid buffers are donated to its program:
+                    # the stream never holds two chunks' (K, M, n) grids
+                    # live at once (results/dispatch count unchanged).
+                    donate=True,
                 )
                 base = self._baseline(params)
                 break

@@ -98,6 +98,13 @@ SAMPLE_OFF, SAMPLE_ON, RUN, NOOP = 0, 1, 2, 3
 
 _KIND_CODES = {"sample_off": SAMPLE_OFF, "sample_on": SAMPLE_ON, "run": RUN}
 
+#: Grid leaves that are scan CARRY state: each has exactly one output of
+#: identical shape/dtype (units0 -> cache_units, bw0 -> bandwidth, pf0 ->
+#: prefetch_on, active0 -> active), so a ``donate=True`` dispatch hands
+#: precisely these buffers to XLA for in-place reuse — every donation is
+#: consumed, none wasted (no "unusable donation" lowering warnings).
+_CARRY_KEYS = ("units0", "bw0", "pf0", "active0")
+
 
 def segment_table(
     schedule: Sequence[ScheduleSegment],
@@ -469,19 +476,31 @@ def _compiled_stacked(
     total_units: int,
     iters: int,
     grid_shards: Tuple[int, int],
+    donate: bool = False,
 ):
     """Build the jitted (optionally shard_mapped) stacked-timeline executor.
 
     Cached per static configuration so repeated sweeps reuse both the
     Python wrapper and XLA's compilation cache; jit retraces on new array
-    shapes (different K, M, n or segment count) as usual.
+    shapes (different K, M, n or segment count) as usual.  ``donate=True``
+    compiles with the ``_CARRY_KEYS`` grid leaves split into a donated
+    first argument: the chunk's carry-state buffers are reused in place
+    for the outputs, so a streaming caller does not hold two chunks'
+    worth of carry buffers live at once (the PR 8 leftover in ROADMAP
+    item 3).
     """
     worker = _make_worker(has_sampling, any_cache_dynamic,
                           any_bandwidth_dynamic, max_concurrent_realloc,
                           total_units, iters)
     if grid_shards != (1, 1):
         worker = distributed.shard_grid(worker, grid_shards)
-    return jax.jit(worker)
+    if not donate:
+        return jax.jit(worker)
+
+    def donating(carry0, grid_rest, mgr, replicated):
+        return worker({**grid_rest, **carry0}, mgr, replicated)
+
+    return jax.jit(donating, donate_argnums=(0,))
 
 
 @functools.lru_cache(maxsize=None)
@@ -490,6 +509,7 @@ def _compiled_buckets(
     total_units: int,
     iters: int,
     mix_shards: int,
+    donate: bool = False,
 ):
     """Build the jitted multi-bucket stacked executor: one worker per
     segment-length bucket, all inside ONE jitted program (one dispatch).
@@ -520,7 +540,15 @@ def _compiled_buckets(
             w(g, m, replicated)
             for w, g, m in zip(workers, bucket_grids, bucket_mgrs))
 
-    return jax.jit(fn)
+    if not donate:
+        return jax.jit(fn)
+
+    def donating(bucket_carries, bucket_rests, bucket_mgrs, replicated):
+        grids = tuple({**g, **c}
+                      for g, c in zip(bucket_rests, bucket_carries))
+        return fn(grids, bucket_mgrs, replicated)
+
+    return jax.jit(donating, donate_argnums=(0,))
 
 
 def _length_buckets(lens: Sequence[int]) -> List[List[int]]:
@@ -589,10 +617,16 @@ class PendingTimelines:
     caller can overlap host work (generating the next chunk of a stream)
     with the device computing this one — the double-buffering contract of
     :mod:`repro.sim.stream_sweep`.
+
+    ``donated_inputs`` (``donate=True`` dispatches only) are the device
+    handles of the grid buffers handed to XLA: after the dispatch they are
+    consumed (``is_deleted()``), the proof the streaming caller is not
+    holding chunk c's grid alive while chunk c+1 transfers.
     """
 
     device_results: List[dict]      # per-spec {field: (M, n) device array}
     w_accs: List[float]
+    donated_inputs: Optional[List] = None
 
     def block_until_ready(self) -> "PendingTimelines":
         jax.block_until_ready([d for d in self.device_results])
@@ -628,6 +662,7 @@ def run_timelines(
     bandwidth_delay_decay=0.5,
     iters: int = FIXED_POINT_ITERS,
     shard: Optional[bool] = None,
+    donate: bool = False,
 ) -> List[TimelineResult]:
     """Execute a whole manager set's timelines as ONE device program.
 
@@ -660,6 +695,7 @@ def run_timelines(
         bandwidth_delay_decay=bandwidth_delay_decay,
         iters=iters,
         shard=shard,
+        donate=donate,
     ).result()
 
 
@@ -677,6 +713,7 @@ def run_timelines_async(
     bandwidth_delay_decay=0.5,
     iters: int = FIXED_POINT_ITERS,
     shard: Optional[bool] = None,
+    donate: bool = False,
 ) -> PendingTimelines:
     """:func:`run_timelines` without the blocking device->host transfer.
 
@@ -685,6 +722,15 @@ def run_timelines_async(
     ``.result()`` for the host-side :class:`TimelineResult`s.  Argument
     semantics are identical to :func:`run_timelines` (which is literally
     this followed by ``.result()``).
+
+    ``donate=True`` transfers the carry-state grid leaves (``units0`` /
+    ``bw0`` / ``pf0`` / ``active0``) to the device first and donates
+    exactly those buffers to the program — each aliases the final-state
+    output of identical shape/dtype, so a chunked stream
+    (:mod:`repro.sim.stream_sweep`) reuses chunk c's carry buffers for
+    chunk c's outputs instead of allocating fresh ones.  Donation changes
+    buffer *lifetime* only — results are bit-identical to the non-donated
+    path and the dispatch count is unchanged.
     """
     if not specs:
         raise ValueError("need at least one TimelineSpec")
@@ -745,6 +791,11 @@ def run_timelines_async(
 
     grid_shards = ((1, 1) if shard is False
                    else distributed.grid_shard_counts(K, M))
+    # Donation is the single-host streaming optimization: under sharding
+    # the committed carry buffers would be resharded before use and the
+    # donation wasted (XLA cannot alias across shardings), so it degrades
+    # to the plain path there.
+    donate = donate and grid_shards == (1, 1)
     buckets = _length_buckets([len(t[0]) for t in tables])
     if grid_shards[0] == 1 and len(buckets) > 1:
         # Frozen-row-skipping path: short-table managers stop paying for
@@ -753,7 +804,7 @@ def run_timelines_async(
         # a sharded manager axis takes the single-bucket path below.
         return _dispatch_buckets(
             buckets, tables, accum, grid, flags, replicated,
-            K, M, grid_shards[1], int(total_units), int(iters))
+            K, M, grid_shards[1], int(total_units), int(iters), donate)
     kinds, acc, reconf = stack_tables(
         [tables[i] for i in range(K)], accum)
     mgr = {"kinds": kinds, "acc": acc, "reconf": reconf, **flags}
@@ -774,10 +825,20 @@ def run_timelines_async(
         has_sampling,
         any(s.cache_dynamic for s in specs),
         any(s.bandwidth_dynamic for s in specs),
-        max_realloc, int(total_units), int(iters), grid_shards)
+        max_realloc, int(total_units), int(iters), grid_shards, donate)
     record_dispatch()
+    donated = None
     with memsys_jax.x64_context():
-        res = fn(grid, mgr, replicated)
+        if donate:
+            # Stable device identities for the donated carry buffers:
+            # transfer first, keep the handles, and hand exactly those
+            # buffers to the program.  They are consumed by the dispatch
+            # (``is_deleted()`` afterwards) — the streaming smoke's gate.
+            carry0 = jax.device_put({k: grid.pop(k) for k in _CARRY_KEYS})
+            donated = list(carry0.values())
+            res = fn(carry0, grid, mgr, replicated)
+        else:
+            res = fn(grid, mgr, replicated)
         # Per-spec device-side slices: no transfer, no block — padding
         # rows fall away exactly as the host-side [:K, :M] slice used to
         # do.  Sliced inside the x64 context: slicing a sharded float64
@@ -786,12 +847,13 @@ def run_timelines_async(
         device_results = [{f: res[f][k, :M] for f in res}
                           for k in range(K)]
     w_accs = [float(a.sum()) for a in acc]
-    return PendingTimelines(device_results, w_accs)
+    return PendingTimelines(device_results, w_accs, donated)
 
 
 def _dispatch_buckets(buckets, tables, accum, grid, flags, replicated,
                       K: int, M: int, mix_shards: int,
-                      total_units: int, iters: int) -> PendingTimelines:
+                      total_units: int, iters: int,
+                      donate: bool = False) -> PendingTimelines:
     """Dispatch the stacked set as per-length bucket scans in ONE program.
 
     Each bucket stacks only its own tables (:func:`stack_tables` snaps
@@ -824,16 +886,28 @@ def _dispatch_buckets(buckets, tables, accum, grid, flags, replicated,
         bucket_grids.append(grid_g)
         bucket_mgrs.append(mgr_g)
 
-    fn = _compiled_buckets(tuple(statics), total_units, iters, mix_shards)
+    fn = _compiled_buckets(tuple(statics), total_units, iters, mix_shards,
+                           donate)
     record_dispatch()
+    donated = None
     with memsys_jax.x64_context():
-        outs = fn(tuple(bucket_grids), tuple(bucket_mgrs), replicated)
+        if donate:
+            # See run_timelines_async: transfer the carry leaves, keep
+            # the handles, donate exactly those.
+            carries = jax.device_put(tuple(
+                {k: g.pop(k) for k in _CARRY_KEYS} for g in bucket_grids))
+            donated = [v for c in carries for v in c.values()]
+            outs = fn(carries, tuple(bucket_grids), tuple(bucket_mgrs),
+                      replicated)
+        else:
+            outs = fn(tuple(bucket_grids), tuple(bucket_mgrs), replicated)
         # Sliced inside the x64 context — see run_timelines_async.
         device_results: List[Optional[dict]] = [None] * K
         for idx_g, o in zip(buckets, outs):
             for row, i in enumerate(idx_g):
                 device_results[i] = {k: v[row, :M] for k, v in o.items()}
-    return PendingTimelines(device_results, [w_accs[i] for i in range(K)])
+    return PendingTimelines(device_results, [w_accs[i] for i in range(K)],
+                            donated)
 
 
 def run_timeline(

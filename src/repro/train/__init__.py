@@ -1,3 +1,5 @@
+from repro.train.plant_model import make_stream_plant_model
 from repro.train.step import TrainStepConfig, build_train_step
 
-__all__ = ["TrainStepConfig", "build_train_step"]
+__all__ = ["TrainStepConfig", "build_train_step",
+           "make_stream_plant_model"]

@@ -1,0 +1,113 @@
+"""Deterministic synthetic training-plant model, host + traced twins.
+
+The fused schedule runner (:mod:`repro.runtime.plant_jax`) needs a step
+model expressible in ``jax.numpy``; the host parity golden
+(``CBPCoordinator`` over ``TrainingPlant``) needs the same model as a
+numpy ``step_fn``.  Writing the rates ONCE over an array namespace — with
+every data-dependent constant precomputed in numpy and shared — keeps the
+two paths arithmetically identical op for op (elementwise float64 only, no
+reductions, no transcendentals), which is what makes the fused-vs-host
+knob trajectories BIT-identical rather than merely close
+(``tests/test_plant_jax.py``).
+
+The model is a stylized training job with ``n`` memory-system streams
+(input pipeline, checkpoint writer, compute streams): throughput rises
+with staging-buffer share and bandwidth share; prefetching helps
+bandwidth-rich streams and pollutes buffer-poor ones (so the A/B throttle
+has a real decision to make); queue wait falls with bandwidth; and the
+buffer utility curves are per-stream concave profiles whose height tracks
+the prefetch setting (interaction #5: prefetch hits flatten the curve the
+cache controller sees).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+from repro.runtime.cbp_runtime import StreamKnobs
+
+
+def _stream_rates(xp, c: Dict[str, np.ndarray], duration_ms, units,
+                  bandwidth, prefetch, total_units: int,
+                  total_bandwidth: float, pin=None):
+    """The shared arithmetic: elementwise float64, both namespaces.
+
+    ``units`` / ``prefetch`` arrive as float64 (the callers cast), so the
+    op *sequence* is identical under numpy and XLA CPU.  ``pin`` marks
+    every rounding point: the traced twin passes
+    :func:`repro.runtime.plant_jax.pin_f64` so LLVM cannot contract the
+    mul+add chains into FMAs (whose unrounded products would drift the
+    trajectory 1 ulp off the numpy twin); the host twin leaves it as
+    identity.
+    """
+    p = pin if pin is not None else (lambda x: x)
+    # Multiply by the precomputed reciprocal instead of dividing: LLVM's
+    # fast-math rewrites division-by-constant into reciprocal multiplies
+    # anyway (for non-power-of-two totals that is a different rounding than
+    # fdiv), so make BOTH twins do the same two-rounding arithmetic.
+    u = p(units * (1.0 / total_units))
+    b = p(bandwidth * (1.0 / total_bandwidth))
+    pollute = p(c["pf_pollution"] / p(0.25 + u))
+    thr = p(p(p(c["base"] * p(1.0 + p(c["cache_gain"] * u)))
+              * p(1.0 + p(c["bw_gain"] * b)))
+            * p(1.0 + p(prefetch * p(c["pf_gain"] - pollute))))
+    wait = p(p(c["wait_base"] / p(b + 0.125))
+             * p(1.0 + p(c["pf_wait"] * prefetch)))
+    scale = p(1.0 + p(c["pf_flatten"] * prefetch))
+    curves = p(p(c["curve_amp"] * scale)[:, None] * c["curve"])
+    return thr, wait, curves
+
+
+def make_stream_plant_model(
+    n_clients: int,
+    total_units: int,
+    total_bandwidth: float,
+    seed: int = 0,
+) -> Tuple[Callable, Callable]:
+    """Build the (host ``step_fn``, traced ``step_model``) twin pair.
+
+    Both close over the same numpy constants; the traced twin only swaps
+    the namespace.  Deterministic in ``seed`` — the TrainingPlant golden
+    test pins trajectories from seed 0.
+    """
+    rng = np.random.default_rng(seed)
+    units_axis = np.arange(total_units + 1, dtype=np.float64)
+    knee = rng.uniform(0.08, 0.45, n_clients) * total_units
+    c = {
+        "base": rng.uniform(0.6, 1.4, n_clients),
+        "cache_gain": rng.uniform(0.2, 1.0, n_clients),
+        "bw_gain": rng.uniform(0.5, 2.0, n_clients),
+        "pf_gain": rng.uniform(0.0, 0.35, n_clients),
+        "pf_pollution": rng.uniform(0.0, 0.12, n_clients),
+        "pf_wait": rng.uniform(-0.2, 0.3, n_clients),
+        "pf_flatten": rng.uniform(-0.3, 0.1, n_clients),
+        "wait_base": rng.uniform(20.0, 120.0, n_clients),
+        "curve_amp": rng.uniform(50.0, 400.0, n_clients),
+        # concave hits-vs-units profiles (saturating rational, precomputed
+        # so curve *shape* costs zero per-step cross-backend arithmetic)
+        "curve": units_axis[None, :] / (units_axis[None, :] + knee[:, None]),
+    }
+    c = {k: np.asarray(v, dtype=np.float64) for k, v in c.items()}
+
+    def step_model(duration_ms, units, bandwidth, prefetch):
+        import jax.numpy as jnp
+
+        from repro.runtime.plant_jax import pin_f64
+
+        # Runtime-opaque int64 zero (duration is a traced value, so XLA
+        # cannot constant-fold the xor inside pin_f64 away).
+        zero = (jnp.asarray(duration_ms) < 0).astype(jnp.int64)
+        return _stream_rates(jnp, c, duration_ms, units, bandwidth,
+                             prefetch, total_units, total_bandwidth,
+                             pin=lambda x: pin_f64(x, zero))
+
+    def step_fn(duration_ms: float, knobs: StreamKnobs):
+        return _stream_rates(
+            np, c, duration_ms,
+            np.asarray(knobs.buffer_units, dtype=np.float64),
+            np.asarray(knobs.bandwidth_mbps, dtype=np.float64),
+            np.asarray(knobs.prefetch_on, dtype=np.float64),
+            total_units, total_bandwidth)
+
+    return step_fn, step_model

@@ -180,6 +180,26 @@ def test_cbp_matmul_matches_ref(dtype, blocks):
         atol=TOL[dtype], rtol=TOL[dtype])
 
 
+@pytest.mark.parametrize("shape", [(97, 53, 160), (130, 70, 96)])
+def test_cbp_matmul_pad_aware_planned_blocks(shape):
+    """Prime/odd dims: the pad-aware planner returns blocks tiling
+    ``ceil(dim / block) * block``; the kernel zero-pads the operands to
+    that extent (exact for a matmul) and slices the result back."""
+    from repro.runtime.cbp_runtime import plan_matmul_blocks
+
+    m, n, k = shape
+    bm, bn, bk = plan_matmul_blocks(m, n, k, dtype_bytes=4)
+    assert bm % 8 == 0 or bm >= m  # snapped or full-extent tiling
+    rng = jax.random.PRNGKey(9)
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.normal(k1, (m, k), jnp.float32)
+    b = jax.random.normal(k2, (k, n), jnp.float32)
+    out = cbp_matmul(a, b, block_m=bm, block_n=bn, block_k=bk,
+                     interpret=True)
+    assert out.shape == (m, n)
+    np.testing.assert_allclose(out, matmul_ref(a, b), atol=1e-4, rtol=1e-4)
+
+
 def test_vmem_footprint_monotone():
     f1 = vmem_footprint_bytes(64, 64, 64)
     f2 = vmem_footprint_bytes(128, 128, 128)

@@ -1,0 +1,242 @@
+"""Fused TrainingPlant: bit-parity vs the host coordinator golden.
+
+The fused schedule runner (``repro.runtime.plant_jax``) executes a whole
+Fig. 8 knob schedule as ONE jitted ``lax.scan``; the host pair —
+``CBPCoordinator`` over ``TrainingPlant`` with the numpy twin of the step
+model — is the golden.  With every rounding point pinned (``pin_f64``:
+XLA's CPU backend FMA-contracts and re-associates straight through
+``lax.optimization_barrier``), the two knob trajectories must be
+BIT-identical, not merely close, on 1 and (``slow``) 8 forced devices.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.dispatch import device_dispatches, reset_device_dispatches
+from repro.core.types import CBPParams, Mode, PrefetchMode, ScheduleConfigError
+from repro.runtime.plant_jax import (
+    FusedTrainingPlant,
+    host_reference_run,
+    run_fused_schedule,
+)
+from repro.train.plant_model import make_stream_plant_model
+
+FIELDS = ("kinds", "t_ms", "duration_ms", "cache_units", "bandwidth",
+          "prefetch_on", "ipc", "queuing_delay_ns")
+
+BASE = dict(n_clients=4, total_units=48, total_bandwidth=64.0, total_ms=60.0)
+BASE_PARAMS = dict(reconfiguration_interval_ms=10.0, min_ways=2,
+                   min_bandwidth_allocation=2.0)
+
+
+def _pair(seed=0, n_clients=4, total_units=48, total_bandwidth=64.0):
+    return make_stream_plant_model(n_clients, total_units, total_bandwidth,
+                                   seed=seed)
+
+
+def _assert_bit_identical(fused, host):
+    for f in FIELDS:
+        np.testing.assert_array_equal(getattr(fused, f), getattr(host, f),
+                                      err_msg=f, strict=True)
+
+
+def test_fused_schedule_matches_host_bitwise_in_one_dispatch():
+    """The tentpole gate: a full dynamic knob schedule — cache Lookahead,
+    Algorithm-1 bandwidth, Algorithm-2 A/B throttling — runs as one
+    device program and lands bit-for-bit on the host trajectory."""
+    step_fn, step_model = _pair()
+    params = CBPParams(**BASE_PARAMS)
+    host = host_reference_run(step_fn, params=params, **BASE)
+    reset_device_dispatches()
+    fused = run_fused_schedule(step_model, params=params, **BASE)
+    assert device_dispatches() == 1
+    _assert_bit_identical(fused, host)
+
+
+@pytest.mark.parametrize("modes", [
+    dict(cache_mode=Mode.EQUAL),
+    dict(bandwidth_mode=Mode.EQUAL),
+    dict(prefetch_mode=PrefetchMode.ON),
+    dict(prefetch_mode=PrefetchMode.OFF),
+])
+def test_fused_schedule_parity_per_knob_mode(modes):
+    """Each Table-3 style knob configuration (static cache, static
+    bandwidth, prefetch forced on/off) keeps bit-parity — the fused cond
+    branches mirror the host coordinator's mode switches exactly."""
+    step_fn, step_model = _pair()
+    params = CBPParams(**BASE_PARAMS)
+    host = host_reference_run(step_fn, params=params, **BASE, **modes)
+    fused = run_fused_schedule(step_model, params=params, **BASE, **modes)
+    _assert_bit_identical(fused, host)
+
+
+@pytest.mark.parametrize("seed,n,units,bw,total_ms,interval", [
+    (3, 6, 64, 96.0, 85.0, 7.0),
+    (7, 12, 96, 128.0, 45.0, 5.0),
+    (11, 5, 40, 80.0, 400.0, 13.0),
+])
+def test_fused_schedule_parity_across_shapes(seed, n, units, bw, total_ms,
+                                             interval):
+    """Parity is not a fluke of one size: client counts spanning numpy's
+    sequential and 8-way-unrolled summation regimes, long horizons (400 ms
+    = hundreds of segments), and odd intervals all stay bit-identical."""
+    step_fn, step_model = _pair(seed, n, units, bw)
+    params = CBPParams(reconfiguration_interval_ms=interval, min_ways=2,
+                       min_bandwidth_allocation=1.0)
+    kw = dict(n_clients=n, total_units=units, total_bandwidth=bw,
+              total_ms=total_ms, params=params)
+    host = host_reference_run(step_fn, **kw)
+    fused = run_fused_schedule(step_model, **kw)
+    _assert_bit_identical(fused, host)
+
+
+def test_fused_plant_golden_trajectory_seed0():
+    """Pin the seed-0 trajectory so silent arithmetic drift in either twin
+    (model constants, controller op order) shows up as a golden break, not
+    just as both-sides-moved parity."""
+    step_fn, step_model = _pair()
+    params = CBPParams(**BASE_PARAMS)
+    plant = FusedTrainingPlant(4, 48, 64.0, step_model)
+    res = plant.run(60.0, params=params)
+    host = host_reference_run(step_fn, params=params, **BASE)
+    _assert_bit_identical(res, host)
+
+    assert len(res.kinds) == 18
+    # sample_off, sample_on, run — six Fig. 8 intervals of 10 ms.
+    assert res.kinds.tolist() == [0, 1, 2] * 6
+    assert res.duration_ms.sum() == 60.0
+    np.testing.assert_array_equal(res.cache_units[-1], [10, 16, 14, 8])
+    np.testing.assert_array_equal(res.prefetch_on[-1],
+                                  [True, True, False, False])
+    np.testing.assert_allclose(
+        res.bandwidth[-1],
+        [12.040298212087718, 19.93764745844568,
+         17.58097142792976, 14.44108290153684], rtol=0, atol=0)
+    np.testing.assert_allclose(
+        res.mean_ipc(),
+        [2.455269686809507, 2.3384549025142496,
+         1.9288628566770705, 1.4381098901010647], rtol=0, atol=0)
+
+
+def test_fused_plant_one_dispatch_per_run_warm():
+    """Warm reruns still cost exactly one dispatch each (the compiled
+    schedule is cached per (model, statics) key)."""
+    _, step_model = _pair()
+    params = CBPParams(**BASE_PARAMS)
+    plant = FusedTrainingPlant(4, 48, 64.0, step_model)
+    plant.run(60.0, params=params)
+    reset_device_dispatches()
+    for _ in range(3):
+        plant.run(60.0, params=params)
+    assert device_dispatches() == 3
+
+
+def test_boundary_interval_schedule_parity():
+    """Satellite 1 regression: the boundary value ``interval == 2 *
+    sampling`` (all-sampling schedule, zero run segments) is legal and
+    keeps host/fused parity — the old mis-scheduling drifted sample
+    boundaries off the reconfiguration grid."""
+    step_fn, step_model = _pair()
+    params = CBPParams(reconfiguration_interval_ms=1.0,
+                       prefetch_sampling_period_ms=0.5, min_ways=2,
+                       min_bandwidth_allocation=2.0)
+    kw = dict(n_clients=4, total_units=48, total_bandwidth=64.0,
+              total_ms=30.0, params=params)
+    host = host_reference_run(step_fn, **kw)
+    fused = run_fused_schedule(step_model, **kw)
+    _assert_bit_identical(fused, host)
+    # every segment is a sample; durations cover the horizon exactly
+    assert set(host.kinds.tolist()) == {0, 1}
+    assert host.duration_ms.sum() == 30.0
+
+
+def test_schedule_config_error_names_both_params():
+    """Satellite 1: an interval too short to hold both A/B samples is a
+    typed error at CBPParams construction, naming both knobs."""
+    with pytest.raises(ScheduleConfigError) as ei:
+        CBPParams(reconfiguration_interval_ms=0.9,
+                  prefetch_sampling_period_ms=0.5)
+    msg = str(ei.value)
+    assert "reconfiguration_interval_ms" in msg
+    assert "prefetch_sampling_period_ms" in msg
+    for bad in (dict(reconfiguration_interval_ms=0.0),
+                dict(prefetch_sampling_period_ms=-1.0)):
+        with pytest.raises(ScheduleConfigError):
+            CBPParams(**bad)
+
+
+def test_fused_plant_rejects_infeasible_floors():
+    """Feasibility stays hoisted on the host: bandwidth floors and
+    min_ways capacity are validated before anything compiles."""
+    _, step_model = _pair()
+    with pytest.raises(ValueError):
+        run_fused_schedule(step_model, n_clients=4, total_units=48,
+                           total_bandwidth=4.0, total_ms=10.0,
+                           params=CBPParams(min_bandwidth_allocation=2.0))
+    with pytest.raises(ValueError):
+        run_fused_schedule(step_model, n_clients=4, total_units=4,
+                           total_bandwidth=64.0, total_ms=10.0,
+                           params=CBPParams(min_ways=4))
+
+
+_DEVICES_SCRIPT = """
+import json, sys
+import numpy as np
+import jax
+from repro.core.types import CBPParams
+from repro.runtime.plant_jax import run_fused_schedule
+from repro.train.plant_model import make_stream_plant_model
+assert jax.device_count() == 8, jax.device_count()
+_, step_model = make_stream_plant_model(4, 48, 64.0)
+res = run_fused_schedule(
+    step_model, n_clients=4, total_units=48, total_bandwidth=64.0,
+    total_ms=60.0, params=CBPParams(reconfiguration_interval_ms=10.0,
+                                    min_ways=2,
+                                    min_bandwidth_allocation=2.0))
+json.dump({"cache_units": res.cache_units.tolist(),
+           "bandwidth": res.bandwidth.tolist(),
+           "prefetch_on": res.prefetch_on.tolist(),
+           "ipc": res.ipc.tolist(),
+           "queuing_delay_ns": res.queuing_delay_ns.tolist()}, sys.stdout)
+"""
+
+
+def _forced_device_env(n: int = 8) -> dict:
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        flags += f" --xla_force_host_platform_device_count={n}"
+    env["XLA_FLAGS"] = flags.strip()
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(repo, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return env
+
+
+@pytest.mark.slow
+def test_fused_plant_parity_on_forced_8_devices():
+    """The fused trajectory on 8 forced host devices is bit-identical to
+    the host golden computed here — device count must not perturb the
+    pinned rounding points."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _DEVICES_SCRIPT], env=_forced_device_env(),
+        capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    got = json.loads(proc.stdout)
+
+    step_fn, _ = _pair()
+    host = host_reference_run(step_fn, params=CBPParams(**BASE_PARAMS),
+                              **BASE)
+    np.testing.assert_array_equal(np.asarray(got["cache_units"]),
+                                  host.cache_units)
+    np.testing.assert_array_equal(np.asarray(got["bandwidth"]),
+                                  host.bandwidth)
+    np.testing.assert_array_equal(np.asarray(got["prefetch_on"]),
+                                  host.prefetch_on)
+    np.testing.assert_array_equal(np.asarray(got["ipc"]), host.ipc)
+    np.testing.assert_array_equal(np.asarray(got["queuing_delay_ns"]),
+                                  host.queuing_delay_ns)

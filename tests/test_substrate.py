@@ -255,11 +255,11 @@ def test_planned_blocks_run_correctly():
     np.testing.assert_allclose(out, matmul_ref(a, b), atol=2e-5, rtol=2e-5)
 
 
-# The planner is deterministic (UCP greedy + pow2 clamps), so its outputs
-# are PINNED: any change to the utility curves, the greedy tie-breaks or
-# the alignment rules shows up here as a diff to review, not a silent
-# re-plan.  Values were produced by the current planner and spot-checked
-# for divisibility/footprint below.
+# The planner is deterministic (UCP greedy + pad-aware snap), so its
+# outputs are PINNED: any change to the utility curves, the greedy
+# tie-breaks or the alignment rules shows up here as a diff to review, not
+# a silent re-plan.  Values were produced by the current planner and
+# spot-checked for feasibility/footprint below.
 PLAN_GOLDENS = {
     # default budget: generous enough that every block saturates to the
     # full problem extent, for both bf16 and f32 tile bytes.
@@ -276,11 +276,32 @@ PLAN_GOLDENS = {
     (512, 512, 512, 4, 1048576): (256, 256, 256),
     (1024, 256, 512, 2, 1048576): (512, 256, 512),
     (1024, 256, 512, 4, 262144): (128, 128, 64),
-    (384, 384, 192, 2, 262144): (128, 128, 64),
-    (384, 384, 192, 4, 1048576): (128, 128, 192),
+    # re-pinned by the pad-aware snap fix: the old pow2 divide-down lost
+    # to the largest exact ALIGNED divisor of 384/192 (96 and 192 beat
+    # 64/128 — bigger blocks, zero padding, still inside the budget).
+    (384, 384, 192, 2, 262144): (128, 128, 96),
+    (384, 384, 192, 4, 1048576): (192, 192, 192),
     (256, 128, 128, 2, 1048576): (256, 128, 128),
     (256, 128, 128, 4, 262144): (128, 128, 64),
+    # prime/odd dims: the old divide-down collapsed these to 1-wide
+    # blocks; the pad-aware snap keeps an aligned block tiling the padded
+    # extent (97 -> 104 = 13 x 8, 513 -> 520).
+    (97, 64, 48, 2, None): (104, 64, 48),
+    (97, 97, 97, 2, 262144): (104, 104, 104),
+    (513, 256, 96, 2, 262144): (128, 128, 96),
+    (100, 100, 100, 4, 262144): (64, 64, 64),
+    # m < 8: the whole extent is one sublane-padded tile (the old
+    # _pow2_clamp(lo=8, hi=m) only got here by lo>hi inversion).
+    (4, 128, 128, 2, None): (4, 128, 128),
+    (6, 512, 512, 4, 262144): (6, 128, 64),
 }
+
+
+def _block_feasible(dim, block):
+    """Pad-aware feasibility: exact divisor, or an aligned block tiling
+    the padded extent ceil(dim/block)*block (caller pads the operand)."""
+    return dim % block == 0 or (block % 8 == 0
+                                and block <= -(-dim // 8) * 8)
 
 
 def test_plan_matmul_blocks_golden_grid():
@@ -289,7 +310,8 @@ def test_plan_matmul_blocks_golden_grid():
         got = plan_matmul_blocks(m, n, k, dtype_bytes=db, **kw)
         assert got == want, (m, n, k, db, budget, got)
         bm, bn, bk = got
-        assert m % bm == 0 and n % bn == 0 and k % bk == 0, (got, m, n, k)
+        assert _block_feasible(m, bm) and _block_feasible(n, bn) \
+            and _block_feasible(k, bk), (got, m, n, k)
 
 
 def test_plan_matmul_blocks_jax_backend_matches_numpy_goldens():
@@ -300,3 +322,43 @@ def test_plan_matmul_blocks_jax_backend_matches_numpy_goldens():
         got = plan_matmul_blocks(m, n, k, dtype_bytes=db,
                                  allocator_backend="jax", **kw)
         assert got == want, (m, n, k, db, budget, got)
+
+
+def test_plan_matmul_blocks_batched_matches_scalar_one_dispatch():
+    """The whole golden grid plans in ONE device call, bit-identical to
+    the scalar path — including shapes with different dtype_bytes and
+    vmem budgets (capacity groups fuse into a single program)."""
+    from repro.core.dispatch import device_dispatches, reset_device_dispatches
+    from repro.runtime.cbp_runtime import VMEM_BYTES, plan_matmul_blocks_batched
+
+    keys = list(PLAN_GOLDENS)
+    shapes = [(m, n, k) for (m, n, k, _db, _vb) in keys]
+    dbs = [db for (_m, _n, _k, db, _vb) in keys]
+    budgets = [vb if vb is not None else VMEM_BYTES // 8
+               for (_m, _n, _k, _db, vb) in keys]
+    reset_device_dispatches()
+    got = plan_matmul_blocks_batched(shapes, dtype_bytes=dbs,
+                                     vmem_budget=budgets)
+    assert device_dispatches() == 1
+    assert [tuple(b) for b in got] == list(PLAN_GOLDENS.values())
+    host = plan_matmul_blocks_batched(shapes, dtype_bytes=dbs,
+                                      vmem_budget=budgets,
+                                      allocator_backend="numpy")
+    assert host == got
+
+
+def test_planned_blocks_pad_aware_run_correctly():
+    """A prime-dim plan runs through cbp_matmul after padding the operands
+    to the planned blocks — the documented pad-aware contract."""
+    from repro.kernels.cbp_matmul.kernel import cbp_matmul
+    from repro.kernels.cbp_matmul.ref import matmul_ref
+    m, n, k = 97, 64, 48
+    bm, bn, bk = plan_matmul_blocks(m, n, k)
+    assert (bm, bn, bk) == (104, 64, 48)
+    mp = -(-m // bm) * bm
+    a = jax.random.normal(jax.random.PRNGKey(2), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(3), (k, n))
+    a_pad = jnp.pad(a, ((0, mp - m), (0, 0)))
+    out = cbp_matmul(a_pad, b, block_m=bm, block_n=bn, block_k=bk,
+                     interpret=True)[:m]
+    np.testing.assert_allclose(out, matmul_ref(a, b), atol=2e-5, rtol=2e-5)

@@ -217,6 +217,52 @@ def test_length_buckets_group_exact_length():
             assert len({lens[i] for i in b}) == 1
 
 
+def test_donated_chunk_buffers_bitwise_parity_and_consumed():
+    """Satellite (ROADMAP item 3 leftover): ``donate=True`` hands a
+    chunk's grid buffers to XLA — same results bit for bit, same dispatch
+    count, and the donated device handles are consumed by the program, so
+    a stream never holds two chunks' grids live at once."""
+    from repro.sim.stream_sweep import StreamConfig, _build_specs
+    from repro.sim.workloads import scenario_chunk
+    from repro.sim import timeline_jax
+
+    cfg = StreamConfig(n_mixes=8, chunk_size=8, total_ms=20.0)
+    specs = _build_specs(cfg, cfg.scenario.apps_per_mix)
+    params = scenario_chunk(cfg.scenario, cfg.seed, 0, cfg.chunk_size)
+    params.pop("mix_indices", None)
+    kw = dict(total_units=cfg.total_cache_units,
+              total_bandwidth=cfg.total_bandwidth,
+              min_ways=cfg.params.min_ways,
+              speedup_threshold=cfg.params.speedup_threshold,
+              min_bandwidth_allocation=cfg.params.min_bandwidth_allocation,
+              atd_decay=cfg.params.atd_decay,
+              bandwidth_delay_decay=cfg.params.bandwidth_delay_decay,
+              shard=False)  # donation is the single-host path
+
+    reset_device_dispatches()
+    plain = timeline_jax.run_timelines(params, specs, **kw)
+    plain_dispatches = device_dispatches()
+
+    reset_device_dispatches()
+    pending = timeline_jax.run_timelines_async(params, specs, donate=True,
+                                               **kw)
+    assert device_dispatches() == plain_dispatches
+    assert pending.donated_inputs, "donated dispatch must keep its handles"
+    donated = pending.result()
+    assert all(buf.is_deleted() for buf in pending.donated_inputs)
+
+    for d, p in zip(donated, plain):
+        np.testing.assert_array_equal(d.ipc_acc, p.ipc_acc)
+        np.testing.assert_array_equal(d.cache_units, p.cache_units)
+        np.testing.assert_array_equal(d.bandwidth, p.bandwidth)
+        np.testing.assert_array_equal(d.prefetch_on, p.prefetch_on)
+        assert d.w_acc == p.w_acc
+
+    # The non-donated path keeps its inputs alive (no handle tracking).
+    assert timeline_jax.run_timelines_async(
+        params, specs, **kw).donated_inputs is None
+
+
 _SHARD_SCRIPT = """
 import json, sys
 import numpy as np

@@ -14,7 +14,11 @@
 # the streaming-service smoke (benchmarks/stream_bench.py --smoke):
 # resume-parity gate (injected dispatch failure retried, NaN-poisoned
 # chunk quarantined, mid-run kill + resume -> bit-identical aggregates)
-# and the 3-dispatches-per-chunk budget.
+# and the 3-dispatches-per-chunk budget — plus the runtime-bindings
+# smoke (benchmarks/runtime_bench.py --smoke): fused TrainingPlant
+# one-dispatch budget + bit-parity vs the host coordinator and the
+# batched block-planner one-dispatch parity, warm wall gated against
+# the committed record.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -36,4 +40,5 @@ if [ "$SMOKE" = "1" ]; then
   timeout 180 python -m benchmarks.fig5_smoke
   timeout 180 python -m benchmarks.serving_bench --smoke
   timeout 300 python -m benchmarks.stream_bench --smoke
+  timeout 180 python -m benchmarks.runtime_bench --smoke
 fi
