@@ -36,7 +36,8 @@ timeline or the allocator.
 With ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` the same
 smoke exercises the multi-device path: the stacked program shards its
 2-D (manager x mix) grid over the N forced host devices via
-``repro.distributed.shard_grid`` — 11 managers x 32 mixes on 8 forced
+``repro.distributed.shard_grid`` — the 14 registered managers (the full
+policy registry, auction/qos/bank bw included) x 32 mixes on 8 forced
 devices factor into a (2, 4) mesh (that is the CI ``shard8`` job).
 """
 from __future__ import annotations
@@ -125,11 +126,15 @@ def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
         "cbp_geomean_ws": summary["CBP"],
     }
     if compare_fused:
-        # Frozen-row-skipping gate: the single stacked program must not be
-        # slower than the per-manager fused programs it replaced (those
+        # Frozen-row-skipping gate: the single stacked program must stay
+        # within 5% of the per-manager fused programs it replaced (those
         # get XLA's inter-program overlap for free; the stacked path has
-        # to earn the tie through bucketed short scans + the unrolled
-        # boundary greedy).
+        # to earn the near-tie through bucketed short scans + the unrolled
+        # boundary greedy).  The tolerance covers the policy-registry
+        # machinery — the wider batched boundary greedy (auction/qos are
+        # cache-dynamic) and the per-row registry dispatch — which 11 of
+        # the 14 per-manager programs statically elide but the one
+        # stacked program must carry for everyone.
         cfg = CMPConfig(timeline_backend="fused")
         run_sweep(mixes, total_ms=total_ms, config=cfg)  # warm its jits
         wall_fused = float("inf")
@@ -146,10 +151,10 @@ def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
                 wall_warm / max(wall_fused, 1e-9), 3),
         })
         derived["wall_s_device_alloc_warm"] = round(wall_warm, 3)
-        if wall_warm > wall_fused:
+        if wall_warm > 1.05 * wall_fused:
             raise RuntimeError(
                 f"stacked sweep slower than per-manager fused: "
-                f"{wall_warm:.3f}s vs {wall_fused:.3f}s")
+                f"{wall_warm:.3f}s vs {wall_fused:.3f}s (5% tolerance)")
     else:
         derived.update({k: prior[k] for k in FUSED_FIELDS if k in prior})
     if compare_segment:
@@ -188,7 +193,8 @@ def main(n_mixes: int = DEFAULT_MIXES, total_ms: float = DEFAULT_TOTAL_MS,
     budget_x = float(os.environ.get("SWEEP_SMOKE_BUDGET_X", "3.0"))
     prior_warm = prior.get("wall_s_device_alloc_warm")
     comparable = (prior.get("n_mixes") == n_mixes
-                  and prior.get("total_ms") == total_ms)
+                  and prior.get("total_ms") == total_ms
+                  and prior.get("n_managers") == len(MANAGER_NAMES))
     if prior_warm and comparable and wall_warm > budget_x * prior_warm:
         raise RuntimeError(
             f"sweep wall-time regression: warm {wall_warm:.2f}s vs "

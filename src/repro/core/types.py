@@ -55,6 +55,7 @@ class Allocation:
     prefetch_on: np.ndarray          # (n,) bool
     cache_mode: Mode = Mode.DYNAMIC
     bandwidth_mode: Mode = Mode.DYNAMIC
+    bandwidth_banks: int = 1         # >1: per-bank-token bandwidth regime
 
     @property
     def n(self) -> int:
@@ -67,6 +68,7 @@ class Allocation:
             prefetch_on=self.prefetch_on.copy(),
             cache_mode=self.cache_mode,
             bandwidth_mode=self.bandwidth_mode,
+            bandwidth_banks=self.bandwidth_banks,
         )
 
 

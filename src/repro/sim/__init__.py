@@ -19,10 +19,20 @@ from repro.sim.managers import (
     MANAGER_NAMES,
     TABLE3_MODES,
     ManagerResult,
+    policy_loop,
     run_all_managers,
     run_manager,
 )
 from repro.sim.memsys import SteadyState, evaluate, mpki_curve, utility_curves
+from repro.sim.policies import (
+    REGISTRY,
+    PolicyFamily,
+    UnknownManagerError,
+    get_family,
+    manager_names,
+    table3_modes,
+    validate_manager_names,
+)
 from repro.sim.runner import (
     CMPConfig,
     CMPPlant,
@@ -43,7 +53,7 @@ _SWEEP_EXPORTS = (
 _STATIC_SEARCH_EXPORTS = (
     "FIG5_FAMILIES", "FIG5_TWO_RESOURCE", "FamilySpec", "StaticGrid",
     "StaticOptions", "StaticSearchResult", "enumerate_grid", "family_grid",
-    "search_static",
+    "registry_families", "search_static",
 )
 _STREAM_EXPORTS = (
     "CheckpointMismatchError", "NumericalDivergenceError", "RetryPolicy",
@@ -74,8 +84,10 @@ __all__ = [
     "APP_NAMES", "BASELINE_BW_GBPS", "BASELINE_UNITS", "MIN_UNITS",
     "PROFILES", "TOTAL_BW_GBPS", "TOTAL_UNITS_8MB", "AppArrays", "stack",
     "stack_mixes",
-    "MANAGER_NAMES", "TABLE3_MODES", "ManagerResult", "run_all_managers",
-    "run_manager",
+    "MANAGER_NAMES", "TABLE3_MODES", "ManagerResult", "policy_loop",
+    "run_all_managers", "run_manager",
+    "REGISTRY", "PolicyFamily", "UnknownManagerError", "get_family",
+    "manager_names", "table3_modes", "validate_manager_names",
     "SteadyState", "evaluate", "mpki_curve", "utility_curves",
     "CMPConfig", "CMPPlant", "antt", "baseline_ipc", "equal_share",
     "weighted_speedup",

@@ -48,6 +48,10 @@ PF_QUEUE_WEIGHT = 0.55     # prefetch fills are issued off the critical path
 RHO_MAX = 0.98            # queue stability clip
 FIXED_POINT_ITERS = 60
 DAMPING = 0.5
+BANK_SKEW = 0.6           # banked-token mode: per-bank access affinity decay
+                          # (each client concentrates on "its" banks; row-
+                          # buffer locality makes the spread geometric)
+DEFAULT_BANDWIDTH_BANKS = 4
 
 
 @dataclasses.dataclass
@@ -74,6 +78,22 @@ def mpki_curve(apps: AppArrays, units: np.ndarray) -> np.ndarray:
     return apps.mpki_floor + span * np.exp(-(u - 4.0) / apps.ws_units)
 
 
+def bank_affinity(n_apps: int, n_banks: int) -> np.ndarray:
+    """Per-(client, bank) access affinity for the banked-token mode.
+
+    Client i concentrates geometrically (``BANK_SKEW``) on bank
+    ``(i + b) % n_banks`` order — a stand-in for address-interleaving +
+    row-buffer locality — normalized so each client's affinities sum to 1.
+    For ``n_banks == 1`` this is exactly 1.0 (skew**0 / 1.0), which makes
+    the banked formulas reduce BIT-identically to the flat partitioned
+    channel model.
+    """
+    i = np.arange(n_apps, dtype=np.float64)[:, None]
+    b = np.arange(n_banks, dtype=np.float64)[None, :]
+    a = BANK_SKEW ** np.mod(i + b, float(n_banks))
+    return a / a.sum(axis=-1, keepdims=True)
+
+
 def evaluate(
     apps: AppArrays,
     cache_units: np.ndarray,
@@ -85,6 +105,7 @@ def evaluate(
     total_cache_units: float = 256.0,
     total_bandwidth_gbps: float = 64.0,
     llc_extra_cycles: float = 0.0,
+    bandwidth_banks: int = 1,
     iters: int = FIXED_POINT_ITERS,
 ) -> SteadyState:
     """Solve the IPC <-> traffic <-> queuing fixed point.
@@ -92,6 +113,13 @@ def evaluate(
     All array arguments broadcast against shape (..., n) where n = #apps.
     ``cache_units``/``bandwidth_gbps`` are ignored for the dimensions that
     are unpartitioned (the shared model applies instead).
+
+    ``bandwidth_banks > 1`` switches the partitioned-bandwidth regime to
+    per-bank tokens (arxiv 2410.14003): each client's allocation is split
+    evenly across banks, its traffic spreads by :func:`bank_affinity`, and
+    queuing is the affinity-weighted sum of per-bank M/M/1 delays — a hot
+    bank saturates before the client's aggregate allocation does.  The
+    flat partitioned model is the exact 1-bank special case.
     """
     cache_units = np.asarray(cache_units, dtype=np.float64)
     bw = np.asarray(bandwidth_gbps, dtype=np.float64)
@@ -138,7 +166,17 @@ def evaluate(
         # ---- memory queuing ---------------------------------------------- #
         traffic = ipc * FREQ_GHZ * reqki * LINE_BYTES / 1000.0  # GB/s
         traffic_q = ipc * FREQ_GHZ * reqki_q * LINE_BYTES / 1000.0
-        if bandwidth_partitioned:
+        if bandwidth_partitioned and bandwidth_banks > 1:
+            # Banked tokens: affinity-weighted per-bank M/M/1 queues; the
+            # effective cap is set by the first bank a client saturates.
+            aff = bank_affinity(traffic_q.shape[-1], bandwidth_banks)
+            bank_bw = bw[..., None] / float(bandwidth_banks)
+            rho_b = traffic_q[..., None] * aff / np.maximum(bank_bw, 1e-6)
+            rho_cb = np.clip(rho_b, 0.0, RHO_MAX)
+            q_bank = Q_SCALE_NS * rho_cb / (1.0 - rho_cb)
+            q_ns = np.sum(aff * q_bank, axis=-1)
+            cap_gbps = np.min(bank_bw / aff, axis=-1)
+        elif bandwidth_partitioned:
             rho = traffic_q / np.maximum(bw, 1e-6)
             cap_gbps = bw
         else:
@@ -153,8 +191,9 @@ def evaluate(
                 frac = np.where(tot_full > 0, traffic / tot_full,
                                 1.0 / traffic.shape[-1])
             cap_gbps = frac * total_bandwidth_gbps
-        rho_c = np.clip(rho, 0.0, RHO_MAX)
-        q_ns = Q_SCALE_NS * rho_c / (1.0 - rho_c)
+        if not (bandwidth_partitioned and bandwidth_banks > 1):
+            rho_c = np.clip(rho, 0.0, RHO_MAX)
+            q_ns = Q_SCALE_NS * rho_c / (1.0 - rho_c)
         if not bandwidth_partitioned:
             # FR-FCFS-style unfairness: clients with a small share of the
             # traffic wait behind other clients' bursts; heavy streaming

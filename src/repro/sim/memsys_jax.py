@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.dispatch import record_dispatch
 from repro.sim.apps import MODEL_FIELDS, AppArrays
 from repro.sim.memsys import (
+    BANK_SKEW,
     DAMPING,
     DRAM_LAT_NS,
     FIXED_POINT_ITERS,
@@ -72,9 +73,46 @@ def mpki_curve(params: Params, units: jnp.ndarray) -> jnp.ndarray:
     return params["mpki_floor"] + span * jnp.exp(-(u - 4.0) / params["ws_units"])
 
 
+def _bank_affinity(n_apps: int, n_banks: int, dtype) -> jnp.ndarray:
+    """JAX mirror of :func:`repro.sim.memsys.bank_affinity` (static banks)."""
+    i = jnp.arange(n_apps, dtype=dtype)[:, None]
+    b = jnp.arange(n_banks, dtype=dtype)[None, :]
+    a = BANK_SKEW ** jnp.mod(i + b, float(n_banks))
+    return a / a.sum(axis=-1, keepdims=True)
+
+
+def _banked_queueing(traffic_q, bw, banks, max_banks: int):
+    """Affinity-weighted per-bank queueing with a *traced* bank count.
+
+    ``banks`` broadcasts against ``(..., n)`` (float, >= 1); ``max_banks``
+    is the static bank-axis width.  Rows with ``banks == 1`` reduce
+    BIT-identically to the flat partitioned channel model: affinity is
+    exactly 1.0 (skew**0 / 1.0), ``x * 1.0`` and ``x / 1.0`` are IEEE
+    identities, masked banks contribute exact zeros to the queue sum and
+    ``+inf`` to the cap min.  Returns ``(q_ns, cap_gbps)``.
+    """
+    n = traffic_q.shape[-1]
+    i = jnp.arange(n, dtype=traffic_q.dtype)[:, None]           # (n, 1)
+    b = jnp.arange(max_banks, dtype=traffic_q.dtype)[None, :]   # (1, MAXB)
+    nb = jnp.broadcast_to(banks, traffic_q.shape)[..., None]    # (..., n, 1)
+    active = b < nb
+    a_raw = jnp.where(active, BANK_SKEW ** jnp.mod(i + b, nb), 0.0)
+    aff = a_raw / a_raw.sum(axis=-1, keepdims=True)
+    bank_bw = bw[..., None] / nb
+    rho_b = traffic_q[..., None] * aff / jnp.maximum(bank_bw, 1e-6)
+    rho_cb = jnp.clip(rho_b, 0.0, RHO_MAX)
+    q_bank = Q_SCALE_NS * rho_cb / (1.0 - rho_cb)
+    q_ns = jnp.sum(aff * q_bank, axis=-1)
+    cap = jnp.min(
+        jnp.where(active, bank_bw / jnp.where(active, aff, 1.0), jnp.inf),
+        axis=-1)
+    return q_ns, cap
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("cache_partitioned", "bandwidth_partitioned", "iters"))
+    static_argnames=("cache_partitioned", "bandwidth_partitioned", "iters",
+                     "bandwidth_banks"))
 def _evaluate_jit(
     params: Params,
     cache_units: jnp.ndarray,
@@ -86,6 +124,7 @@ def _evaluate_jit(
     cache_partitioned: bool,
     bandwidth_partitioned: bool,
     iters: int,
+    bandwidth_banks: int = 1,
 ):
     shape = jnp.broadcast_shapes(
         cache_units.shape, bw.shape, pf.shape, params["cpi_base"].shape)
@@ -116,10 +155,22 @@ def _evaluate_jit(
         # ---- memory queuing --------------------------------------------- #
         traffic = ipc * FREQ_GHZ * reqki * LINE_BYTES / 1000.0
         traffic_q = ipc * FREQ_GHZ * reqki_q * LINE_BYTES / 1000.0
-        if bandwidth_partitioned:
+        if bandwidth_partitioned and bandwidth_banks > 1:
+            # Banked tokens (mirror of the numpy golden): affinity-weighted
+            # per-bank M/M/1 queues, cap set by the first saturated bank.
+            aff = _bank_affinity(n, bandwidth_banks, ipc.dtype)
+            bank_bw = bw[..., None] / float(bandwidth_banks)
+            rho_b = traffic_q[..., None] * aff / jnp.maximum(bank_bw, 1e-6)
+            rho_cb = jnp.clip(rho_b, 0.0, RHO_MAX)
+            q_bank = Q_SCALE_NS * rho_cb / (1.0 - rho_cb)
+            q_ns = jnp.sum(aff * q_bank, axis=-1)
+            cap_gbps = jnp.broadcast_to(
+                jnp.min(bank_bw / aff, axis=-1), shape).astype(ipc.dtype)
+        elif bandwidth_partitioned:
             rho = traffic_q / jnp.maximum(bw, 1e-6)
             cap_gbps = jnp.broadcast_to(bw, shape).astype(ipc.dtype)
-            frac = None
+            rho_c = jnp.clip(rho, 0.0, RHO_MAX)
+            q_ns = Q_SCALE_NS * rho_c / (1.0 - rho_c)
         else:
             tot = jnp.sum(traffic_q, axis=-1, keepdims=True)
             rho = jnp.broadcast_to(tot / total_bandwidth_gbps, shape)
@@ -127,9 +178,8 @@ def _evaluate_jit(
             safe_tot = jnp.where(tot_full > 0, tot_full, 1.0)
             frac = jnp.where(tot_full > 0, traffic / safe_tot, 1.0 / n)
             cap_gbps = frac * total_bandwidth_gbps
-        rho_c = jnp.clip(rho, 0.0, RHO_MAX)
-        q_ns = Q_SCALE_NS * rho_c / (1.0 - rho_c)
-        if not bandwidth_partitioned:
+            rho_c = jnp.clip(rho, 0.0, RHO_MAX)
+            q_ns = Q_SCALE_NS * rho_c / (1.0 - rho_c)
             q_ns = q_ns * (1.0 + IF_SKEW * (1.0 - frac))
 
         # ---- IPC --------------------------------------------------------- #
@@ -159,6 +209,8 @@ def _evaluate_rowflags(
     cache_partitioned: jnp.ndarray,
     bandwidth_partitioned: jnp.ndarray,
     iters: int,
+    bandwidth_banks=None,
+    max_banks: int = 1,
 ):
     """:func:`_evaluate_jit` with *traced per-row* partitioning flags.
 
@@ -172,6 +224,13 @@ def _evaluate_rowflags(
     :func:`_evaluate_jit` with that row's flags (pinned by
     ``tests/test_timeline_fused.py``).  Meant to be called inside an
     enclosing jitted program — it is not jitted itself.
+
+    ``bandwidth_banks`` (traced, broadcasting against the batch axes) and
+    the static ``max_banks`` select the banked-token regime per row: when
+    ``max_banks > 1`` every partitioned row goes through the generalized
+    bank formula, whose 1-bank rows are bit-identical to the flat model
+    (:func:`_banked_queueing`) — so mixing banked and flat rows in one
+    stack preserves the stacked-vs-fused parity contract.
     """
     shape = jnp.broadcast_shapes(
         cache_units.shape, bw.shape, pf.shape, params["cpi_base"].shape)
@@ -202,19 +261,25 @@ def _evaluate_rowflags(
         # ---- memory queuing --------------------------------------------- #
         traffic = ipc * FREQ_GHZ * reqki * LINE_BYTES / 1000.0
         traffic_q = ipc * FREQ_GHZ * reqki_q * LINE_BYTES / 1000.0
-        rho_p = traffic_q / jnp.maximum(bw, 1e-6)
-        cap_p = jnp.broadcast_to(bw, shape).astype(ipc.dtype)
+        if max_banks > 1:
+            q_p, cap_p = _banked_queueing(
+                traffic_q, bw, bandwidth_banks, max_banks)
+            cap_p = jnp.broadcast_to(cap_p, shape).astype(ipc.dtype)
+        else:
+            rho_p = traffic_q / jnp.maximum(bw, 1e-6)
+            rho_cp = jnp.clip(rho_p, 0.0, RHO_MAX)
+            q_p = Q_SCALE_NS * rho_cp / (1.0 - rho_cp)
+            cap_p = jnp.broadcast_to(bw, shape).astype(ipc.dtype)
         tot = jnp.sum(traffic_q, axis=-1, keepdims=True)
         rho_u = jnp.broadcast_to(tot / total_bandwidth_gbps, shape)
         tot_full = jnp.sum(traffic, axis=-1, keepdims=True)
         safe_tot = jnp.where(tot_full > 0, tot_full, 1.0)
         frac = jnp.where(tot_full > 0, traffic / safe_tot, 1.0 / n)
-        rho = jnp.where(bw_part, rho_p, rho_u)
+        rho_cu = jnp.clip(rho_u, 0.0, RHO_MAX)
+        q_u = Q_SCALE_NS * rho_cu / (1.0 - rho_cu)
+        q_u = q_u * (1.0 + IF_SKEW * (1.0 - frac))
         cap_gbps = jnp.where(bw_part, cap_p, frac * total_bandwidth_gbps)
-        rho_c = jnp.clip(rho, 0.0, RHO_MAX)
-        q_ns = Q_SCALE_NS * rho_c / (1.0 - rho_c)
-        q_ns = jnp.where(bw_part, q_ns,
-                         q_ns * (1.0 + IF_SKEW * (1.0 - frac)))
+        q_ns = jnp.where(bw_part, q_p, q_u)
 
         # ---- IPC --------------------------------------------------------- #
         penalty_cyc = (DRAM_LAT_NS + q_ns) * FREQ_GHZ / params["mlp"]
@@ -243,6 +308,7 @@ def evaluate(
     total_cache_units: float = 256.0,
     total_bandwidth_gbps: float = 64.0,
     llc_extra_cycles: float = 0.0,
+    bandwidth_banks: int = 1,
     iters: int = FIXED_POINT_ITERS,
 ) -> SteadyState:
     """Batched JAX counterpart of :func:`repro.sim.memsys.evaluate`.
@@ -261,7 +327,7 @@ def evaluate(
             f64(llc_extra_cycles),
             cache_partitioned=cache_partitioned,
             bandwidth_partitioned=bandwidth_partitioned,
-            iters=iters)
+            iters=iters, bandwidth_banks=bandwidth_banks)
     return SteadyState(
         ipc=ipc, queuing_delay_ns=q_ns, traffic_gbps=traffic,
         mpki=mpki_eff, exposed_mpki=exposed, occupancy_units=occ)

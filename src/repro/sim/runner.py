@@ -100,6 +100,7 @@ class CMPPlant:
             total_cache_units=float(self.total_cache_units),
             total_bandwidth_gbps=self.total_bandwidth,
             llc_extra_cycles=self.config.llc_extra_cycles,
+            bandwidth_banks=alloc.bandwidth_banks,
         )
         if self.config.backend == "jax":
             ss = memsys.SteadyState(**{

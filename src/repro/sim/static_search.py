@@ -85,6 +85,7 @@ class FamilySpec:
     manage_bw: bool = False
     manage_pf: bool = False
     pf_all_on: bool = False
+    bandwidth_banks: int = 1     # >1: banked-token bandwidth regime
 
 
 #: The Fig. 5 manager families (paper §2.3), insertion order = plot order.
@@ -100,6 +101,26 @@ FIG5_FAMILIES: Dict[str, FamilySpec] = {
 
 #: The two-resource subsets the all-three family is compared against.
 FIG5_TWO_RESOURCE = ("bw+pref", "cache+bw", "cache+pref")
+
+
+def registry_families(
+        names: Optional[Sequence[str]] = None) -> Dict[str, FamilySpec]:
+    """Manager families' static-grid vocabularies as :class:`FamilySpec`.
+
+    Converts the policy registry's plain ``static_grid`` kwargs
+    (:mod:`repro.sim.policies`) into the search's family specs, so
+    ``search_static(families=registry_families(["CBP", "bank bw"]))``
+    explores exactly the knobs each manager family may move.  Default:
+    every registered family.
+    """
+    from repro.sim import policies
+
+    resolved = policies.manager_names() if names is None else list(names)
+    out: Dict[str, FamilySpec] = {}
+    for name in resolved:
+        fam = policies.get_family(name)   # UnknownManagerError on a typo
+        out[name] = FamilySpec(**(fam.static_grid or {}))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -270,6 +291,13 @@ class StaticSearchResult:
     ``topk_ws`` / ``topk_index`` are ``(W, k)`` — sorted descending by
     weighted speedup, distinct config indices into ``grids[family]``,
     with ``-inf`` / ``-1`` filling slots beyond the feasible count.
+
+    With ``multi_objective`` the slots hold the Pareto front over
+    (weighted speedup, min-fairness) instead of the scalar top-k:
+    still sorted descending by weighted speedup — so fairness strictly
+    increases down the slots — with ``topk_fairness`` carrying each
+    front member's min-fairness and ``k`` doubling as the front
+    capacity (fronts wider than ``k`` keep their ``k`` best-ws members).
     """
 
     family_names: List[str]
@@ -280,6 +308,37 @@ class StaticSearchResult:
     baseline_ipc: np.ndarray            # (W, n)
     backend: str
     k: int
+    topk_fairness: Optional[Dict[str, np.ndarray]] = None   # (W, k)
+    multi_objective: bool = False
+
+    def knee_index(self, family: str) -> np.ndarray:
+        """Per-workload config index of the front's knee point, ``(W,)``.
+
+        The knee is the front member closest (Euclidean) to the utopia
+        point after min-max normalizing both objectives over the front —
+        the standard balanced-trade-off pick.  Ties and degenerate
+        (single-member or zero-span) fronts resolve toward the
+        best-weighted-speedup end.  Multi-objective results only.
+        """
+        if not self.multi_objective:
+            raise ValueError(
+                "knee_index needs a multi_objective=True search result")
+        ws = np.asarray(self.topk_ws[family], dtype=np.float64)
+        f = np.asarray(self.topk_fairness[family], dtype=np.float64)
+        idx = np.asarray(self.topk_index[family])
+        valid = idx >= 0
+
+        def norm(x):
+            lo = np.min(np.where(valid, x, np.inf), axis=-1, keepdims=True)
+            hi = np.max(np.where(valid, x, -np.inf), axis=-1, keepdims=True)
+            span = hi - lo
+            return np.where(span > 0, (x - lo) / np.where(span > 0, span, 1.0),
+                            1.0)
+
+        dist = (1.0 - norm(ws)) ** 2 + (1.0 - norm(f)) ** 2
+        dist = np.where(valid, dist, np.inf)
+        pos = np.argmin(dist, axis=-1)       # first minimum: best-ws end
+        return np.take_along_axis(idx, pos[:, None], axis=-1)[:, 0]
 
     @property
     def n_workloads(self) -> int:
@@ -333,38 +392,78 @@ def _row_apps(stacked: AppArrays, wi: int) -> AppArrays:
 # numpy golden-reference backend
 # --------------------------------------------------------------------- #
 
+def _pareto_topk(ws: np.ndarray, fairness: np.ndarray, index: np.ndarray,
+                 k: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """The ``k`` best-ws Pareto-front members of one candidate set.
+
+    Sort by (ws desc, fairness desc, index asc); an entry is on the front
+    iff its fairness strictly exceeds the exclusive running max — which
+    drops strictly dominated entries, weakly dominated ones (equal in one
+    objective, worse in the other) and exact duplicates (keeping the
+    lowest index) in one rule.  Masked candidates carry ``-inf`` in both
+    objectives and can never be kept.  The JAX fold
+    (:func:`_family_scan`) applies the identical rule per merge step.
+    """
+    order = np.lexsort((index, -fairness, -ws))
+    s_ws, s_f, s_idx = ws[order], fairness[order], index[order]
+    run_max = np.concatenate(
+        [[-np.inf], np.maximum.accumulate(s_f)[:-1]])
+    kept_ws = np.where(s_f > run_max, s_ws, -np.inf)
+    sel = np.argsort(-kept_ws, kind="stable")[:k]
+    out_ws, out_f, out_idx = kept_ws[sel], s_f[sel], s_idx[sel]
+    empty = np.isinf(out_ws)
+    pad = k - len(sel)
+    return (np.concatenate([out_ws, np.full(pad, -np.inf)]),
+            np.concatenate([np.where(empty, -np.inf, out_f),
+                            np.full(pad, -np.inf)]),
+            np.concatenate([np.where(empty, -1, out_idx),
+                            np.full(pad, -1, out_idx.dtype)]))
+
+
 def _search_numpy_family(
     apps_rows: List[AppArrays],
     grid: StaticGrid,
     baseline_ipc: np.ndarray,
     k: int,
     iters: int,
-) -> Tuple[np.ndarray, np.ndarray]:
+    banks: int = 1,
+    multi: bool = False,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """One host solve per workload over the whole (unpadded) grid."""
     w = len(apps_rows)
     top_ws = np.full((w, k), -np.inf)
+    top_f = np.full((w, k), -np.inf)
     top_idx = np.full((w, k), -1, dtype=np.int64)
     for wi, arr in enumerate(apps_rows):
         ss = memsys.evaluate(
             arr, grid.cache, grid.bandwidth, grid.prefetch,
             total_cache_units=grid.total_cache_units,
             total_bandwidth_gbps=grid.total_bandwidth_gbps,
-            iters=iters)
-        ws = np.mean(ss.ipc / baseline_ipc[wi], axis=-1)
+            bandwidth_banks=banks, iters=iters)
+        speedup = ss.ipc / baseline_ipc[wi]
+        ws = np.mean(speedup, axis=-1)
         ws = np.where(grid.valid, ws, -np.inf)
+        if multi:
+            fair = np.min(speedup, axis=-1) / np.max(speedup, axis=-1)
+            fair = np.where(grid.valid, fair, -np.inf)
+            idx = np.arange(len(ws), dtype=np.int64)
+            top_ws[wi], top_f[wi], top_idx[wi] = _pareto_topk(
+                ws, fair, idx, k)
+            continue
         # Stable descending sort: equal speedups keep enumeration order,
         # i.e. the lowest config index wins (the documented tie-break).
         order = np.argsort(-ws, kind="stable")[:k]
         top_ws[wi, : len(order)] = ws[order]
         top_idx[wi, : len(order)] = order
-    return top_ws, top_idx
+    return top_ws, top_idx, top_f
 
 
 # --------------------------------------------------------------------- #
 # JAX device backend
 # --------------------------------------------------------------------- #
 
-def _family_scan(p, base, tables, k: int, iters: int):
+def _family_scan(p, base, tables, k: int, iters: int, banks: int = 1,
+                 multi: bool = False):
     """The chunked top-k fold of ONE family, shared by both program shapes.
 
     ``tables`` holds the family's chunked config grid (``(s, chunk, n)``
@@ -374,6 +473,13 @@ def _family_scan(p, base, tables, k: int, iters: int):
     the running entries (earlier chunks = lower config indices) are
     concatenated first, so the global tie-break is "lowest enumeration
     index" — matching the numpy reference's stable argsort.
+
+    With ``multi`` the carry folds the Pareto front over (weighted
+    speedup, min-fairness) instead: each step merges the running front
+    with the WHOLE chunk under the :func:`_pareto_topk` keep rule
+    (sort by ws desc / fairness desc / index asc, keep iff fairness
+    strictly beats the exclusive running max) and retains the ``k``
+    best-ws survivors — ``k`` is the front capacity.
     """
     import jax
     import jax.numpy as jnp
@@ -385,39 +491,87 @@ def _family_scan(p, base, tables, k: int, iters: int):
     llc_extra = tables["llc_extra_cycles"]
 
     def step(carry, xs):
-        top_ws, top_idx = carry
         c_cache, c_bw, c_pf, c_valid, c_idx = xs
         out = memsys_jax._evaluate_jit(
             p, c_cache, c_bw, c_pf, total_units, total_bw, llc_extra,
             cache_partitioned=True, bandwidth_partitioned=True,
-            iters=iters)
-        ws = jnp.mean(out[0] / base[:, None, :], axis=-1)  # (W, chunk)
+            iters=iters, bandwidth_banks=banks)
+        speedup = out[0] / base[:, None, :]                # (W, chunk, n)
+        ws = jnp.mean(speedup, axis=-1)                    # (W, chunk)
         ws = jnp.where(c_valid[None, :], ws, -jnp.inf)
-        cand_ws, cand_loc = jax.lax.top_k(ws, k)
-        cand_idx = c_idx[cand_loc]
-        merged_ws = jnp.concatenate([top_ws, cand_ws], axis=-1)
-        merged_idx = jnp.concatenate([top_idx, cand_idx], axis=-1)
-        top_ws, sel = jax.lax.top_k(merged_ws, k)
-        top_idx = jnp.take_along_axis(merged_idx, sel, axis=-1)
-        return (top_ws, top_idx), None
+        if not multi:
+            top_ws, top_idx = carry
+            cand_ws, cand_loc = jax.lax.top_k(ws, k)
+            cand_idx = c_idx[cand_loc]
+            merged_ws = jnp.concatenate([top_ws, cand_ws], axis=-1)
+            merged_idx = jnp.concatenate([top_idx, cand_idx], axis=-1)
+            top_ws, sel = jax.lax.top_k(merged_ws, k)
+            top_idx = jnp.take_along_axis(merged_idx, sel, axis=-1)
+            return (top_ws, top_idx), None
+
+        top_ws, top_f, top_idx = carry
+        fair = (jnp.min(speedup, axis=-1)
+                / jnp.max(speedup, axis=-1))
+        fair = jnp.where(c_valid[None, :], fair, -jnp.inf)
+        w_rows = ws.shape[0]
+        m_ws = jnp.concatenate([top_ws, ws], axis=-1)
+        m_f = jnp.concatenate([top_f, fair], axis=-1)
+        m_idx = jnp.concatenate(
+            [top_idx, jnp.broadcast_to(c_idx, ws.shape)], axis=-1)
+        # _pareto_topk, vectorized over workload rows.
+        order = jnp.lexsort((m_idx, -m_f, -m_ws), axis=-1)
+        s_ws = jnp.take_along_axis(m_ws, order, axis=-1)
+        s_f = jnp.take_along_axis(m_f, order, axis=-1)
+        s_idx = jnp.take_along_axis(m_idx, order, axis=-1)
+        run_max = jnp.concatenate(
+            [jnp.full((w_rows, 1), -jnp.inf, s_f.dtype),
+             jax.lax.cummax(s_f, axis=1)[:, :-1]], axis=-1)
+        kept_ws = jnp.where(s_f > run_max, s_ws, -jnp.inf)
+        top_ws, sel = jax.lax.top_k(kept_ws, k)
+        top_f = jnp.take_along_axis(s_f, sel, axis=-1)
+        top_idx = jnp.take_along_axis(s_idx, sel, axis=-1)
+        empty = jnp.isinf(top_ws)
+        top_f = jnp.where(empty, -jnp.inf, top_f)
+        top_idx = jnp.where(empty, -1, top_idx)
+        return (top_ws, top_f, top_idx), None
 
     w = base.shape[0]
-    init = (jnp.full((w, k), -jnp.inf, base.dtype),
-            jnp.full((w, k), -1, jnp.int32))
-    (top_ws, top_idx), _ = jax.lax.scan(
+    if multi:
+        init = (jnp.full((w, k), -jnp.inf, base.dtype),
+                jnp.full((w, k), -jnp.inf, base.dtype),
+                jnp.full((w, k), -1, jnp.int32))
+    else:
+        init = (jnp.full((w, k), -jnp.inf, base.dtype),
+                jnp.full((w, k), -1, jnp.int32))
+    carry, _ = jax.lax.scan(
         step, init,
         (tables["cache"], tables["bandwidth"], tables["prefetch"],
          tables["valid"], tables["index"]))
-    return top_ws, top_idx
+    if multi:
+        return carry
+    return carry[0], carry[1]
+
+
+def _pack_scan_out(scan_out, suffix: str = "") -> Dict[str, object]:
+    if len(scan_out) == 3:
+        top_ws, top_f, top_idx = scan_out
+        return {f"topk_ws{suffix}": top_ws,
+                f"topk_fairness{suffix}": top_f,
+                f"topk_index{suffix}": top_idx}
+    top_ws, top_idx = scan_out
+    return {f"topk_ws{suffix}": top_ws, f"topk_index{suffix}": top_idx}
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled_search(k: int, iters: int, n_shards: int):
+def _compiled_search(k: int, iters: int, n_shards: int, banks: int,
+                     multi: bool):
     """Build the jitted (optionally shard_mapped) ONE-family program.
 
-    Cached per static configuration; jit retraces on new array shapes
-    (different W, n, chunking) as usual.  This is the per-family
-    reference path the stacked program is parity-pinned against.
+    Cached per static configuration (``banks`` selects the family's
+    bandwidth regime, ``multi`` the Pareto fold); jit retraces on new
+    array shapes (different W, n, chunking) as usual.  This is the
+    per-family reference path the stacked program is parity-pinned
+    against.
     """
     import jax
 
@@ -428,8 +582,8 @@ def _compiled_search(k: int, iters: int, n_shards: int):
         p = {f: sharded["p_" + f][:, None, :]
              for f in memsys_jax.PARAM_FIELDS}          # (W, 1, n)
         base = sharded["baseline_ipc"]                  # (W, n)
-        top_ws, top_idx = _family_scan(p, base, replicated, k, iters)
-        return {"topk_ws": top_ws, "topk_index": top_idx}
+        return _pack_scan_out(
+            _family_scan(p, base, replicated, k, iters, banks, multi))
 
     if n_shards > 1:
         worker = distributed.shard_rows(worker, n_shards)
@@ -437,13 +591,13 @@ def _compiled_search(k: int, iters: int, n_shards: int):
 
 
 @functools.lru_cache(maxsize=None)
-def _compiled_stacked_search(n_families: int, k: int, iters: int,
-                             n_shards: int):
+def _compiled_stacked_search(banks_per_family: Tuple[int, ...], k: int,
+                             iters: int, n_shards: int, multi: bool):
     """Build the jitted (optionally shard_mapped) ALL-families program.
 
-    Every family keeps its own chunk shape and runs its own
-    :func:`_family_scan` — the family axis concatenates the per-family
-    scans *sequentially inside one program*, so each family's
+    Every family keeps its own chunk shape (and bank count) and runs its
+    own :func:`_family_scan` — the family axis concatenates the
+    per-family scans *sequentially inside one program*, so each family's
     subcomputation is shape-identical to the per-family path (bit-parity
     by construction) while a full :func:`search_static` drops from
     ``len(families) + 1`` device dispatches to 2.  The workload axis
@@ -459,11 +613,10 @@ def _compiled_stacked_search(n_families: int, k: int, iters: int,
              for f in memsys_jax.PARAM_FIELDS}          # (W, 1, n)
         base = sharded["baseline_ipc"]                  # (W, n)
         out = {}
-        for fi in range(n_families):
-            top_ws, top_idx = _family_scan(
-                p, base, replicated[f"family{fi}"], k, iters)
-            out[f"topk_ws{fi}"] = top_ws
-            out[f"topk_index{fi}"] = top_idx
+        for fi, banks in enumerate(banks_per_family):
+            out.update(_pack_scan_out(
+                _family_scan(p, base, replicated[f"family{fi}"], k,
+                             iters, banks, multi), str(fi)))
         return out
 
     if n_shards > 1:
@@ -505,20 +658,23 @@ def _search_jax_family(
     iters: int,
     n_shards: int,
     chunk_elements: int,
-) -> Tuple[np.ndarray, np.ndarray]:
+    banks: int = 1,
+    multi: bool = False,
+) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
     """One device program: chunked grid scan + top-k for one family."""
     from repro.core.dispatch import record_dispatch
     from repro.sim import memsys_jax
 
     w_pad = sharded["baseline_ipc"].shape[0]
     replicated = _family_tables(grid, w_pad, k, chunk_elements)
-    fn = _compiled_search(k, iters, n_shards)
+    fn = _compiled_search(k, iters, n_shards, banks, multi)
     record_dispatch()
     with memsys_jax.x64_context():
         out = fn(sharded, replicated)
         top_ws = np.asarray(out["topk_ws"])[:w]
         top_idx = np.asarray(out["topk_index"])[:w].astype(np.int64)
-    return top_ws, top_idx
+        top_f = (np.asarray(out["topk_fairness"])[:w] if multi else None)
+    return top_ws, top_idx, top_f
 
 
 def _search_jax_stacked(
@@ -529,7 +685,9 @@ def _search_jax_stacked(
     iters: int,
     n_shards: int,
     chunk_elements: int,
-) -> Tuple[Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+    banks_per_family: Tuple[int, ...],
+    multi: bool = False,
+):
     """ONE device program scanning every family's grid back to back."""
     from repro.core.dispatch import record_dispatch
     from repro.sim import memsys_jax
@@ -540,17 +698,21 @@ def _search_jax_stacked(
         f"family{fi}": _family_tables(grids[name], w_pad, k, chunk_elements)
         for fi, name in enumerate(names)
     }
-    fn = _compiled_stacked_search(len(names), k, iters, n_shards)
+    fn = _compiled_stacked_search(banks_per_family, k, iters, n_shards,
+                                  multi)
     record_dispatch()
     topk_ws: Dict[str, np.ndarray] = {}
     topk_idx: Dict[str, np.ndarray] = {}
+    topk_f: Dict[str, np.ndarray] = {}
     with memsys_jax.x64_context():
         out = fn(sharded, replicated)
         for fi, name in enumerate(names):
             topk_ws[name] = np.asarray(out[f"topk_ws{fi}"])[:w]
             topk_idx[name] = np.asarray(
                 out[f"topk_index{fi}"])[:w].astype(np.int64)
-    return topk_ws, topk_idx
+            if multi:
+                topk_f[name] = np.asarray(out[f"topk_fairness{fi}"])[:w]
+    return topk_ws, topk_idx, topk_f
 
 
 # --------------------------------------------------------------------- #
@@ -568,6 +730,7 @@ def search_static(
     shard: Optional[bool] = None,
     chunk_elements: int = CHUNK_ELEMENTS,
     stack_families: bool = True,
+    multi_objective: bool = False,
 ) -> StaticSearchResult:
     """Best static (cache, bandwidth, prefetch) allocation per workload.
 
@@ -591,6 +754,12 @@ def search_static(
         PR 4 one-program-per-family path (``len(families) + 1``
         dispatches) — the stacking parity reference, bit-identical per
         family.  JAX backend only.
+      multi_objective: fold the Pareto front over (weighted speedup,
+        min-fairness) instead of the scalar top-k — ``topk_*`` then hold
+        the front's ``k`` best-ws members (ws descending, fairness
+        ascending down the slots) and ``topk_fairness`` is populated;
+        ``k`` doubles as the front capacity.  Min-fairness is
+        ``min(speedup) / max(speedup)`` per workload.
 
     Returns:
       :class:`StaticSearchResult`; weighted speedups are against the
@@ -628,16 +797,18 @@ def search_static(
     units_eq, bw_eq = equal_share(n, total_units, total_bw)
     pf_off = np.zeros(n)
 
+    banks = {name: int(spec.bandwidth_banks) for name, spec in fams.items()}
     if backend == "numpy":
         base = memsys.evaluate(
             stacked, units_eq.astype(np.float64), bw_eq, pf_off,
             total_cache_units=total_units, total_bandwidth_gbps=total_bw,
             iters=iters).ipc
         apps_rows = [_row_apps(stacked, wi) for wi in range(w)]
-        topk_ws, topk_idx = {}, {}
+        topk_ws, topk_idx, topk_f = {}, {}, {}
         for name, grid in grids.items():
-            topk_ws[name], topk_idx[name] = _search_numpy_family(
-                apps_rows, grid, base, k, iters)
+            topk_ws[name], topk_idx[name], topk_f[name] = \
+                _search_numpy_family(apps_rows, grid, base, k, iters,
+                                     banks[name], multi_objective)
     else:
         from repro import distributed
         from repro.sim import memsys_jax
@@ -662,13 +833,16 @@ def search_static(
                 for key, v in sharded.items()
             }
         if stack_families:
-            topk_ws, topk_idx = _search_jax_stacked(
-                sharded, grids, w, k, iters, n_shards, chunk_elements)
+            topk_ws, topk_idx, topk_f = _search_jax_stacked(
+                sharded, grids, w, k, iters, n_shards, chunk_elements,
+                tuple(banks[name] for name in grids), multi_objective)
         else:
-            topk_ws, topk_idx = {}, {}
+            topk_ws, topk_idx, topk_f = {}, {}, {}
             for name, grid in grids.items():
-                topk_ws[name], topk_idx[name] = _search_jax_family(
-                    sharded, grid, w, k, iters, n_shards, chunk_elements)
+                topk_ws[name], topk_idx[name], topk_f[name] = \
+                    _search_jax_family(
+                        sharded, grid, w, k, iters, n_shards,
+                        chunk_elements, banks[name], multi_objective)
 
     return StaticSearchResult(
         family_names=list(fams),
@@ -679,4 +853,6 @@ def search_static(
         baseline_ipc=np.asarray(base),
         backend=backend,
         k=k,
+        topk_fairness=topk_f if multi_objective else None,
+        multi_objective=multi_objective,
     )

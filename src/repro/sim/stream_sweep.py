@@ -76,7 +76,8 @@ from repro.core.dispatch import record_dispatch
 from repro.runtime.fault import StragglerWatchdog
 from repro.runtime.faultinject import FaultPlan
 from repro.sim import memsys_jax, timeline_jax
-from repro.sim.managers import MANAGER_NAMES, TABLE3_MODES
+from repro.sim import policies
+from repro.sim.managers import MANAGER_NAMES
 from repro.sim.runner import equal_share
 from repro.sim.workloads import StreamScenario, scenario_chunk
 
@@ -158,12 +159,8 @@ class StreamConfig:
                 f"unknown on_divergence {self.on_divergence!r}")
         if self.hist_bins < 2:
             raise ValueError("hist_bins must be >= 2")
-        names = self.manager_names
-        unknown = [n for n in names
-                   if n != "CPpf" and n not in TABLE3_MODES]
-        if unknown:
-            raise ValueError(
-                f"unknown managers {unknown}; valid: {MANAGER_NAMES}")
+        # UnknownManagerError (a ValueError) on the first unregistered name.
+        policies.validate_manager_names(self.manager_names)
 
     @property
     def manager_names(self) -> List[str]:

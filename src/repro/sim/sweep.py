@@ -73,9 +73,9 @@ from repro.core import (
     throttle_decision,
 )
 from repro.core.types import IntervalStats
-from repro.sim import memsys, memsys_jax, timeline_jax
+from repro.sim import memsys, memsys_jax, policies, timeline_jax
 from repro.sim.apps import AppArrays, stack_mixes
-from repro.sim.managers import MANAGER_NAMES, TABLE3_MODES
+from repro.sim.managers import MANAGER_NAMES, TABLE3_MODES, policy_loop
 from repro.sim.runner import (
     CMPConfig,
     _resolve_allocator_backend,
@@ -155,6 +155,7 @@ class BatchedCMPPlant:
             total_cache_units=float(self.total_cache_units),
             total_bandwidth_gbps=self.total_bandwidth,
             llc_extra_cycles=self.config.llc_extra_cycles,
+            bandwidth_banks=alloc.bandwidth_banks,
         )
 
     def run_interval(self, alloc: Allocation,
@@ -470,15 +471,53 @@ def _run_one_manager(
     params_rows: Optional[Sequence[CBPParams]] = None,
 ) -> Tuple[np.ndarray, Allocation]:
     """One manager over every batch row of ``plant`` -> ((M, n) ipc, alloc)."""
-    if name == "CPpf":
+    family = policies.get_family(name)
+    if family.variant == "cppf":
         return _run_cppf_batched(plant, total_ms, params, params_rows)
-    cache_mode, bw_mode, pf_mode = TABLE3_MODES[name]
+    if family.modes is None:
+        # Registry policy / banked families: the scalar host golden IS the
+        # batched segment path (``policy_loop`` is shape-agnostic), with
+        # the per-row tunables threaded through.
+        rows = _per_row_params(params, params_rows, plant.n_mixes)
+        ipc, alloc = policy_loop(
+            plant, family, total_ms, rows.schedule,
+            min_ways=rows.min_ways,
+            min_bandwidth=rows.min_bandwidth_allocation,
+            atd_decay=rows.atd_decay,
+            bandwidth_delay_decay=rows.bandwidth_delay_decay)
+        where = f"run_sweep[{name}]"
+        if _family_modes(family)[0] == Mode.DYNAMIC:
+            _check_units_capacity(
+                alloc.cache_units, plant.total_cache_units, where)
+        _check_bandwidth_capacity(
+            alloc.bandwidth, plant.total_bandwidth, where)
+        return ipc, alloc
+    cache_mode, bw_mode, pf_mode = family.modes
     coord = BatchedCoordinator(
         plant, params=params, cache_mode=cache_mode,
         bandwidth_mode=bw_mode, prefetch_mode=pf_mode,
         params_rows=params_rows)
     coord.run(total_ms)
     return coord.mean_ipc(), coord.alloc
+
+
+def _family_modes(family: policies.PolicyFamily
+                  ) -> Tuple[Mode, Mode, PrefetchMode]:
+    """Effective (cache, bandwidth, prefetch) modes of a registry family.
+
+    Classic Table-3 families carry them verbatim; the auction/QoS boundary
+    policies manage cache and bandwidth dynamically with prefetch off; the
+    banked-bandwidth family keeps cache at the equal split and manages
+    bandwidth via Algorithm 1; CPpf partitions cache over unpartitioned
+    bandwidth with prefetch enabled.
+    """
+    if family.modes is not None:
+        return family.modes
+    if family.variant == "cppf":
+        return (Mode.DYNAMIC, Mode.UNPARTITIONED, PrefetchMode.ON)
+    if family.cache_policy != policies.CACHE_LOOKAHEAD:
+        return (Mode.DYNAMIC, Mode.DYNAMIC, PrefetchMode.OFF)
+    return (Mode.EQUAL, Mode.DYNAMIC, PrefetchMode.OFF)
 
 
 def _fig8_spec(plant: BatchedCMPPlant, cache_mode: Mode, bw_mode: Mode,
@@ -525,7 +564,8 @@ def _manager_spec(plant: BatchedCMPPlant, name: str, total_ms: float,
     per-manager runs bit-for-bit.
     """
     m, n = plant.n_mixes, plant.n_clients
-    if name == "CPpf":
+    family = policies.get_family(name)
+    if family.variant == "cppf":
         return timeline_jax.TimelineSpec(
             schedule=timeline_jax.cppf_schedule(total_ms, params),
             variant="cppf",
@@ -538,9 +578,17 @@ def _manager_spec(plant: BatchedCMPPlant, name: str, total_ms: float,
             init_bandwidth=np.full((m, n), plant.total_bandwidth / n),
             init_prefetch=np.ones((m, n), dtype=bool),
             name=name)
-    cache_mode, bw_mode, pf_mode = TABLE3_MODES[name]
-    return _fig8_spec(plant, cache_mode, bw_mode, pf_mode, total_ms,
+    cache_mode, bw_mode, pf_mode = _family_modes(family)
+    spec = _fig8_spec(plant, cache_mode, bw_mode, pf_mode, total_ms,
                       params, name=name)
+    if family.modes is None:
+        # Registry policy / banked families ride the same fig8 wiring with
+        # their traced branch ids and bandwidth regime stamped on.
+        spec = dataclasses.replace(
+            spec, cache_policy=family.cache_policy,
+            bw_policy=family.bw_policy,
+            bandwidth_banks=family.bandwidth_banks)
+    return spec
 
 
 def _run_managers_stacked(
@@ -581,7 +629,8 @@ def _run_managers_stacked(
             _check_bandwidth_capacity(
                 res.bandwidth, plant.total_bandwidth, "CPpf")
         else:
-            cache_mode, bw_mode, _pf = TABLE3_MODES[spec.name]
+            cache_mode, bw_mode, _pf = _family_modes(
+                policies.get_family(spec.name))
             where = f"run_sweep[{spec.name}]"
             if cache_mode == Mode.DYNAMIC:
                 _check_units_capacity(
@@ -595,6 +644,7 @@ def _run_managers_stacked(
             prefetch_on=res.prefetch_on,
             cache_mode=cache_mode,
             bandwidth_mode=bw_mode,
+            bandwidth_banks=spec.bandwidth_banks,
         )
         out[spec.name] = (res.mean_ipc(), alloc)
     return out
@@ -696,10 +746,7 @@ def run_sweep(
     """
     plant = BatchedCMPPlant(mixes, config)
     names = list(MANAGER_NAMES) if managers is None else list(managers)
-    unknown = [n for n in names if n != "CPpf" and n not in TABLE3_MODES]
-    if unknown:
-        raise ValueError(
-            f"unknown managers {unknown}; valid: {MANAGER_NAMES}")
+    policies.validate_manager_names(names)   # UnknownManagerError on a typo
 
     if param_grid is None:
         params = params or CBPParams()
@@ -732,9 +779,12 @@ def run_sweep(
         """True when no CBPParams field can change the manager's result:
         nothing dynamic means no reconfiguration, no A/B sampling, and a
         time-weighted mean that is segmentation-invariant."""
-        if name == "CPpf":
+        family = policies.get_family(name)
+        if family.modes is None:
+            # CPpf and the registry policy / banked families all manage
+            # at least one resource dynamically.
             return False
-        cm, bm, pm = TABLE3_MODES[name]
+        cm, bm, pm = family.modes
         return (cm != Mode.DYNAMIC and bm != Mode.DYNAMIC
                 and pm != PrefetchMode.DYNAMIC)
 

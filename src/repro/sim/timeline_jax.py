@@ -85,7 +85,7 @@ from repro.core.cache_controller_jax import lookahead_masked_traced
 from repro.core.coordinator import ScheduleSegment
 from repro.core.dispatch import record_dispatch
 from repro.core.prefetch_controller import throttle_decision_jax
-from repro.sim import memsys_jax
+from repro.sim import memsys_jax, policies
 from repro.sim.apps import AppArrays
 from repro.sim.memsys import FIXED_POINT_ITERS, FREQ_GHZ
 
@@ -162,6 +162,14 @@ class TimelineSpec:
     ``(M, n)`` step-0 state; the booleans are the Table-3 mode flags that
     used to be static per-program trace constants and now ride the
     manager axis as data.
+
+    ``cache_policy`` / ``bw_policy`` select the family's boundary
+    allocator branch from the registry's ``lax.switch`` tables
+    (:data:`repro.sim.policies.CACHE_POLICY_NAMES` /
+    :data:`~repro.sim.policies.BW_POLICY_NAMES`; 0 = the classic
+    Lookahead / Algorithm-1 pair).  ``bandwidth_banks > 1`` evaluates the
+    row under the banked-token memory regime.  ``qos_bound`` /
+    ``qos_gain`` parameterize the QoS branch (ignored elsewhere).
     """
 
     schedule: Sequence[ScheduleSegment]
@@ -174,10 +182,36 @@ class TimelineSpec:
     init_bandwidth: np.ndarray
     init_prefetch: np.ndarray
     name: str = ""
+    cache_policy: int = policies.CACHE_LOOKAHEAD
+    bw_policy: int = policies.BW_ALG1
+    bandwidth_banks: int = 1
+    qos_bound: float = policies.QOS_SLOWDOWN_BOUND
+    qos_gain: float = policies.QOS_VIOLATION_GAIN
 
     def __post_init__(self):
         if self.variant not in ("fig8", "cppf"):
             raise ValueError(f"unknown timeline variant {self.variant!r}")
+        if not 0 <= self.cache_policy < len(policies.CACHE_POLICY_NAMES):
+            raise ValueError(
+                f"cache_policy {self.cache_policy} has no traced branch "
+                f"(table: {policies.CACHE_POLICY_NAMES})")
+        if not 0 <= self.bw_policy < len(policies.BW_POLICY_NAMES):
+            raise ValueError(
+                f"bw_policy {self.bw_policy} has no traced branch "
+                f"(table: {policies.BW_POLICY_NAMES})")
+        if self.bandwidth_banks < 1:
+            raise ValueError("bandwidth_banks must be >= 1")
+        if (self.cache_policy or self.bw_policy) and not (
+                self.cache_dynamic and self.bandwidth_dynamic):
+            raise ValueError(
+                "policy-branch rows must be cache_dynamic and "
+                "bandwidth_dynamic (the branch fires at reconfigure "
+                "boundaries gated by those flags)")
+        if self.cache_policy != self.bw_policy:
+            raise ValueError(
+                "cache_policy and bw_policy must select the same branch: "
+                "a boundary branch allocates both resources from the same "
+                "signals (register a combined branch for mixed pairs)")
 
 
 def stack_tables(
@@ -252,6 +286,8 @@ def _make_worker(
     max_concurrent_realloc: int,
     total_units: int,
     iters: int,
+    any_policy: bool = False,
+    max_banks: int = 1,
 ):
     """Build one stacked-timeline worker for a (sub)set of managers.
 
@@ -263,6 +299,14 @@ def _make_worker(
     (:func:`_compiled_buckets`) instantiates one worker per
     segment-length bucket, which is how a bucket of fully-static managers
     sheds the sampling and ATD machinery entirely.
+
+    ``any_policy`` (some manager uses a non-default registry branch)
+    switches the boundary step to dispatch each reconfiguring manager's
+    block through the registry ``lax.switch`` tables and adds the
+    slowdown-reference carries the QoS branch consumes; ``max_banks``
+    is the static bank-axis width of the banked-token model (1 = flat).
+    Both default off, so every pre-registry call site compiles the exact
+    program it used to.
     """
     f64 = jnp.float64
     total_cache_f = float(total_units)
@@ -299,6 +343,12 @@ def _make_worker(
         cache_part = per_row(mgr["cache_partitioned"])
         bw_part = per_row(mgr["bandwidth_partitioned"])
         is_cppf = per_row(mgr["is_cppf"])
+        if any_policy:
+            cache_pol_k = mgr["cache_policy"]              # (K,) int32
+            qos_bound = per_row(mgr["qos_bound"])          # (B, 1)
+            qos_gain = per_row(mgr["qos_gain"])
+        banks_row = (per_row(mgr["bandwidth_banks"])
+                     if max_banks > 1 else None)           # (B, 1) f64
 
         if any_cache_dynamic:
             # The ATD is a LINEAR functional of the per-step hit curves,
@@ -344,8 +394,22 @@ def _make_worker(
             boundary slots minimal; managers not reallocating here are
             untouched.
             """
-            units, bw, w_off, w_on, bw_acc, active, do_r, realloc_k \
-                = operand
+            if any_policy:
+                (units, bw, w_off, w_on, bw_acc, active, do_r, realloc_k,
+                 ref_ipc, prev_ipc) = operand
+            else:
+                units, bw, w_off, w_on, bw_acc, active, do_r, realloc_k \
+                    = operand
+            if any_bandwidth_dynamic:
+                # Algorithm-1 bandwidth update first: it reads none of the
+                # cache state, and running it before the cache gather lets
+                # the registry branches below see the post-update array —
+                # identity rows keep it bit-for-bit, policy rows override
+                # their own block from the same boundary signals.
+                bw = jnp.where(do_r & bw_dyn,
+                               allocate_bandwidth_jax(bw_acc, total_bw,
+                                                      min_bw),
+                               bw)
             # Under manager-axis sharding the global concurrency bound
             # can exceed this shard's manager count — clamp.
             G = min(max_concurrent_realloc, K)
@@ -376,12 +440,65 @@ def _make_worker(
                     [blk(min32, offs[g]) for g in range(G)], axis=0)
                 fresh = lookahead_masked_traced(
                     atd_all, min_all, act_all, total_units)
+                if any_policy:
+                    # Registry dispatch: each reconfiguring manager's block
+                    # goes through its family's boundary branch.  Branch 0
+                    # returns the Lookahead slice + the (post-Algorithm-1)
+                    # bandwidth slice untouched, so classic managers stay
+                    # bit-identical; the auction/QoS branches compute both
+                    # resources from the same boundary signals (ATD grid,
+                    # delay EMA, and the slowdown vs the first-interval
+                    # reference the scan carries for the QoS constraint).
+                    slow = jnp.where(
+                        prev_ipc > 0,
+                        ref_ipc / jnp.where(prev_ipc > 0, prev_ipc, 1.0),
+                        1.0)
+
+                    def _classic_branch(op):
+                        return op[0], op[1]
+
+                    def _auction_branch(op):
+                        look_b, bw_b, atd_b, min_b, acc_b, floor_b, \
+                            slow_b, qb, qg = op
+                        return policies.auction_allocate_jax(
+                            atd_b, acc_b, min_ways=min_b,
+                            total_units=total_units,
+                            min_bandwidth=floor_b,
+                            total_bandwidth=total_bw)
+
+                    def _qos_branch(op):
+                        look_b, bw_b, atd_b, min_b, acc_b, floor_b, \
+                            slow_b, qb, qg = op
+                        return policies.qos_allocate_jax(
+                            atd_b, acc_b, slow_b, min_ways=min_b,
+                            total_units=total_units,
+                            min_bandwidth=floor_b,
+                            total_bandwidth=total_bw,
+                            bound=qb, gain=qg)
+
+                    branches = [_classic_branch, _auction_branch,
+                                _qos_branch]
                 for g in range(G):
+                    units_b = fresh[g * M:(g + 1) * M].astype(units.dtype)
+                    if any_policy:
+                        bw_b = blk(bw, offs[g])
+                        op_g = (units_b, bw_b,
+                                atd_all[g * M:(g + 1) * M],
+                                blk(min32, offs[g])[:, None],
+                                blk(bw_acc, offs[g]),
+                                blk(min_bw, offs[g]),
+                                blk(slow, offs[g]),
+                                blk(qos_bound, offs[g]),
+                                blk(qos_gain, offs[g]))
+                        units_b, bw_new_b = jax.lax.switch(
+                            cache_pol_k[order[g]], branches, op_g)
+                        new_bw_b = jnp.where(
+                            valids[g] & blk(bw_dyn, offs[g]),
+                            bw_new_b, bw_b)
+                        bw = jax.lax.dynamic_update_slice_in_dim(
+                            bw, new_bw_b, offs[g], axis=0)
                     old_b = blk(units, offs[g])
-                    new_b = jnp.where(
-                        valids[g],
-                        fresh[g * M:(g + 1) * M].astype(units.dtype),
-                        old_b)
+                    new_b = jnp.where(valids[g], units_b, old_b)
                     units = jax.lax.dynamic_update_slice_in_dim(
                         units, new_b, offs[g], axis=0)
             if any_cache_dynamic:
@@ -390,25 +507,27 @@ def _make_worker(
                 decay_w = atd_decay[..., 0]                    # (B, 1)
                 w_off = jnp.where(do_r, w_off * decay_w, w_off)
                 w_on = jnp.where(do_r, w_on * decay_w, w_on)
-            if any_bandwidth_dynamic:
-                bw = jnp.where(do_r & bw_dyn,
-                               allocate_bandwidth_jax(bw_acc, total_bw,
-                                                      min_bw),
-                               bw)
             return units, bw, w_off, w_on
 
         def step(carry, seg):
             kind_k, acc_k, reconf_k = seg                      # (K,) each
-            units, bw, pf, active, w_off, w_on, bw_acc, ipc_acc, off_ipc \
-                = carry
+            if any_policy:
+                (units, bw, pf, active, w_off, w_on, bw_acc, ipc_acc,
+                 off_ipc, ref_ipc, prev_ipc) = carry
+            else:
+                (units, bw, pf, active, w_off, w_on, bw_acc, ipc_acc,
+                 off_ipc) = carry
             kind = jnp.repeat(kind_k, M)[:, None]              # (B, 1)
             acc_dt = jnp.repeat(acc_k, M)[:, None]
             do_r = jnp.repeat(reconf_k, M)[:, None]
+            operand = (units, bw, w_off, w_on, bw_acc, active, do_r,
+                       reconf_k & cache_dyn_k)
+            if any_policy:
+                operand = operand + (ref_ipc, prev_ipc)
             units, bw, w_off, w_on = jax.lax.cond(
                 jnp.any(reconf_k), reconfigure,
                 lambda op: (op[0], op[1], op[2], op[3]),
-                (units, bw, w_off, w_on, bw_acc, active, do_r,
-                 reconf_k & cache_dyn_k))
+                operand)
 
             # The A/B samples force the prefetcher off/on for everyone;
             # other segments run the current per-client setting.
@@ -421,8 +540,20 @@ def _make_worker(
             out = memsys_jax._evaluate_rowflags(
                 p, units.astype(f64), bw, pf_f,
                 jnp.asarray(total_cache_f, f64), total_bw, llc_extra,
-                cache_part, bw_part, iters=iters)
+                cache_part, bw_part, iters=iters,
+                bandwidth_banks=banks_row, max_banks=max_banks)
             ipc, q_ns = out[0], out[1]
+            if any_policy:
+                # Slowdown signal for the QoS branch: the reference is
+                # each row's FIRST executed segment (the equal-share
+                # initial state — reconfigures fold onto the following
+                # segment, so the first run always precedes any boundary),
+                # the denominator its most recent one.  Frozen NOOP slots
+                # update neither.
+                executed = kind != NOOP
+                ref_ipc = jnp.where((ref_ipc == 0.0) & executed,
+                                    ipc, ref_ipc)
+                prev_ipc = jnp.where(executed, ipc, prev_ipc)
 
             # Accumulation weights come from the stacked table: fig8
             # accumulates every executed segment (samples included),
@@ -450,16 +581,22 @@ def _make_worker(
                 active = jnp.where(sample_on & is_cppf, ~decision, active)
                 pf = jnp.where(sample_on & ~is_cppf, decision, pf)
                 off_ipc = jnp.where(kind == SAMPLE_OFF, ipc, off_ipc)
-            return ((units, bw, pf, active, w_off, w_on, bw_acc, ipc_acc,
-                     off_ipc), None)
+            new_carry = (units, bw, pf, active, w_off, w_on, bw_acc,
+                         ipc_acc, off_ipc)
+            if any_policy:
+                new_carry = new_carry + (ref_ipc, prev_ipc)
+            return new_carry, None
 
         zeros = jnp.zeros((B, n), dtype=f64)
         carry0 = (rows(grid["units0"]), rows(grid["bw0"]),
                   rows(grid["pf0"]), rows(grid["active0"]),
                   zeros, zeros, zeros, zeros, zeros)
+        if any_policy:
+            carry0 = carry0 + (zeros, zeros)
         xs = (mgr["kinds"].T, mgr["acc"].T, mgr["reconf"].T)   # (S, K)
         carry, _ = jax.lax.scan(step, carry0, xs)
-        units, bw, pf, active, _woff, _won, _bw_acc, ipc_acc, _off = carry
+        units, bw, pf, active, _woff, _won, _bw_acc, ipc_acc, _off \
+            = carry[:9]
         return {k: v.reshape(K, M, n) for k, v in
                 {"ipc_acc": ipc_acc, "cache_units": units, "bandwidth": bw,
                  "prefetch_on": pf, "active": active}.items()}
@@ -477,6 +614,8 @@ def _compiled_stacked(
     iters: int,
     grid_shards: Tuple[int, int],
     donate: bool = False,
+    any_policy: bool = False,
+    max_banks: int = 1,
 ):
     """Build the jitted (optionally shard_mapped) stacked-timeline executor.
 
@@ -491,7 +630,7 @@ def _compiled_stacked(
     """
     worker = _make_worker(has_sampling, any_cache_dynamic,
                           any_bandwidth_dynamic, max_concurrent_realloc,
-                          total_units, iters)
+                          total_units, iters, any_policy, max_banks)
     if grid_shards != (1, 1):
         worker = distributed.shard_grid(worker, grid_shards)
     if not donate:
@@ -505,7 +644,7 @@ def _compiled_stacked(
 
 @functools.lru_cache(maxsize=None)
 def _compiled_buckets(
-    bucket_statics: Tuple[Tuple[bool, bool, bool, int], ...],
+    bucket_statics: Tuple[Tuple[bool, bool, bool, int, bool, int], ...],
     total_units: int,
     iters: int,
     mix_shards: int,
@@ -528,9 +667,10 @@ def _compiled_buckets(
     single-bucket path (:func:`_compiled_stacked`).
     """
     workers = []
-    for (has_sampling, cache_dyn, bw_dyn, max_realloc) in bucket_statics:
+    for (has_sampling, cache_dyn, bw_dyn, max_realloc, any_policy,
+         max_banks) in bucket_statics:
         w = _make_worker(has_sampling, cache_dyn, bw_dyn, max_realloc,
-                         total_units, iters)
+                         total_units, iters, any_policy, max_banks)
         if mix_shards > 1:
             w = distributed.shard_grid(w, (1, mix_shards))
         workers.append(w)
@@ -783,6 +923,14 @@ def run_timelines_async(
         "bandwidth_partitioned": np.array(
             [s.bandwidth_partitioned for s in specs]),
         "is_cppf": np.array([s.variant == "cppf" for s in specs]),
+        "cache_policy": np.array(
+            [s.cache_policy for s in specs], dtype=np.int32),
+        "qos_bound": np.array(
+            [s.qos_bound for s in specs], dtype=np.float64),
+        "qos_gain": np.array(
+            [s.qos_gain for s in specs], dtype=np.float64),
+        "bandwidth_banks": np.array(
+            [float(s.bandwidth_banks) for s in specs], dtype=np.float64),
     }
     replicated = {
         "total_bandwidth": np.float64(total_bandwidth),
@@ -825,7 +973,9 @@ def run_timelines_async(
         has_sampling,
         any(s.cache_dynamic for s in specs),
         any(s.bandwidth_dynamic for s in specs),
-        max_realloc, int(total_units), int(iters), grid_shards, donate)
+        max_realloc, int(total_units), int(iters), grid_shards, donate,
+        any(s.cache_policy or s.bw_policy for s in specs),
+        max(s.bandwidth_banks for s in specs))
     record_dispatch()
     donated = None
     with memsys_jax.x64_context():
@@ -882,6 +1032,8 @@ def _dispatch_buckets(buckets, tables, accum, grid, flags, replicated,
             bool(mgr_g["cache_dynamic"].any()),
             bool(mgr_g["bandwidth_dynamic"].any()),
             int((reconf_g & cache_dyn_col).sum(axis=0).max(initial=0)),
+            bool(mgr_g["cache_policy"].any()),
+            int(mgr_g["bandwidth_banks"].max(initial=1)),
         ))
         bucket_grids.append(grid_g)
         bucket_mgrs.append(mgr_g)

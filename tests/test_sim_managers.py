@@ -15,12 +15,42 @@ from repro.sim import (
 from repro.sim.runner import CMPPlant
 
 
-def test_manager_names_cover_table3_modes():
-    """Every Table-3 mode (notably "equal on", once silently skipped) is a
-    sweep-able manager; CPpf is the only extra name."""
-    assert set(MANAGER_NAMES) == set(TABLE3_MODES) | {"CPpf"}
-    assert "equal on" in MANAGER_NAMES
+def test_registry_completeness():
+    """Every registered family is fully wired: a numpy host golden, a
+    traced allocator branch (valid ``cache_policy`` / ``bw_policy`` ids
+    and bank count), and a static-grid vocabulary for the Fig. 5 search
+    — and the derived name list IS the registry, in insertion order."""
+    from repro.sim import policies
+
+    assert MANAGER_NAMES == list(policies.REGISTRY)
     assert len(MANAGER_NAMES) == len(set(MANAGER_NAMES))
+    assert set(TABLE3_MODES) == {
+        name for name, fam in policies.REGISTRY.items()
+        if fam.modes is not None}
+    assert "equal on" in TABLE3_MODES          # once silently skipped
+    for name in ("auction", "qos", "bank bw"):  # the related-work families
+        assert name in MANAGER_NAMES
+    for name, fam in policies.REGISTRY.items():
+        assert fam.host_golden is not None, name
+        assert 0 <= fam.cache_policy < len(policies.CACHE_POLICY_NAMES)
+        assert 0 <= fam.bw_policy < len(policies.BW_POLICY_NAMES)
+        assert fam.bandwidth_banks >= 1
+        assert isinstance(fam.static_grid, dict), name
+
+
+def test_unknown_manager_error_names_the_key_and_the_menu():
+    from repro.sim import UnknownManagerError
+    from repro.sim.managers import run_manager
+    from repro.sim.sweep import run_sweep
+
+    plant = CMPPlant(WORKLOADS["w1"])
+    with pytest.raises(UnknownManagerError) as ei:
+        run_manager("cpb", plant, total_ms=1.0)
+    assert "cpb" in str(ei.value)
+    assert "CBP" in str(ei.value) and "auction" in str(ei.value)
+    assert issubclass(UnknownManagerError, ValueError)
+    with pytest.raises(UnknownManagerError):
+        run_sweep([WORKLOADS["w1"]], managers=["CBP", "nope"], total_ms=1.0)
 
 
 @pytest.fixture(scope="module")

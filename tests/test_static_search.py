@@ -41,6 +41,7 @@ from repro.sim.static_search import (
     StaticOptions,
     enumerate_grid,
     family_grid,
+    registry_families,
     search_static,
 )
 from repro.sim.workloads import random_workloads
@@ -298,6 +299,161 @@ def test_arbitrary_napp_workloads_and_custom_grids():
     assert cfg["cache_units"].shape == (2, 5)
     assert (cfg["cache_units"].sum(axis=-1) <= 16.0 * 5 + 1e-9).all()
     assert (cfg["bandwidth_gbps"].sum(axis=-1) <= 4.0 * 5 + 1e-9).all()
+
+
+# --------------------------------------------------------------------- #
+# multi-objective (Pareto) mode + policy-registry grids
+# --------------------------------------------------------------------- #
+
+
+def _brute_force_front(res, fam, wi):
+    """O(C^2) domination enumeration over the WHOLE grid — independent of
+    the fold's sort-and-running-max shortcut.  Returns (ws, fairness,
+    index) rows sorted descending by ws, exact duplicates deduplicated to
+    the lowest config index (the fold's documented tie-break)."""
+    from repro.sim import memsys
+    from repro.sim.apps import stack
+    from repro.sim.static_search import FIG5_ITERS
+
+    grid = res.grids[fam]
+    arr = stack(res.workloads[wi])
+    ss = memsys.evaluate(
+        arr, grid.cache, grid.bandwidth, grid.prefetch,
+        total_cache_units=grid.total_cache_units,
+        total_bandwidth_gbps=grid.total_bandwidth_gbps,
+        iters=FIG5_ITERS)
+    speedup = ss.ipc / res.baseline_ipc[wi]
+    ws = np.mean(speedup, axis=-1)
+    fair = np.min(speedup, axis=-1) / np.max(speedup, axis=-1)
+    pts = [(ws[i], fair[i], i) for i in range(len(ws)) if grid.valid[i]]
+    front, seen = [], set()
+    for w_i, f_i, i in pts:
+        dominated = any(
+            (w_j >= w_i and f_j >= f_i and (w_j > w_i or f_j > f_i))
+            for w_j, f_j, _ in pts)
+        if dominated or (w_i, f_i) in seen:
+            continue
+        seen.add((w_i, f_i))
+        front.append((w_i, f_i, i))
+    front.sort(key=lambda t: (-t[0], t[2]))
+    return front
+
+
+def test_pareto_front_matches_brute_force_enumeration():
+    """Acceptance gate: the multi-objective fold's front equals an O(C^2)
+    brute-force domination enumeration over the small grid — same
+    members, same (ws, fairness) values, same config indices, ws
+    descending / fairness ascending down the slots."""
+    wls = random_workloads(2, 3, seed=6)
+    fams = {"cache+bw": FIG5_FAMILIES["cache+bw"]}
+    res = search_static(wls, families=fams, k=16, backend="numpy",
+                        multi_objective=True)
+    assert res.multi_objective and res.topk_fairness is not None
+    for wi in range(2):
+        front = _brute_force_front(res, "cache+bw", wi)
+        assert 2 <= len(front) <= res.k  # a real front, never truncated
+        got_idx = res.topk_index["cache+bw"][wi]
+        valid = got_idx >= 0
+        assert valid.sum() == len(front)
+        np.testing.assert_array_equal(got_idx[valid],
+                                      [i for _, _, i in front])
+        np.testing.assert_allclose(res.topk_ws["cache+bw"][wi][valid],
+                                   [w for w, _, _ in front], rtol=0)
+        np.testing.assert_allclose(res.topk_fairness["cache+bw"][wi][valid],
+                                   [f for _, f, _ in front], rtol=0)
+        # front shape: ws strictly decreasing, fairness strictly increasing
+        ws_v = res.topk_ws["cache+bw"][wi][valid]
+        f_v = res.topk_fairness["cache+bw"][wi][valid]
+        assert (np.diff(ws_v) < 0).all() and (np.diff(f_v) > 0).all()
+        # empty slots carry the documented sentinels
+        assert (res.topk_ws["cache+bw"][wi][~valid] == -np.inf).all()
+        assert (res.topk_fairness["cache+bw"][wi][~valid] == -np.inf).all()
+
+
+def test_pareto_jax_matches_numpy_backend():
+    """The chunked device-side Pareto fold is exact: identical front
+    members, values and indices to the whole-grid numpy reference."""
+    wls = random_workloads(3, 2, seed=5)
+    fams = {"cache+bw": FIG5_FAMILIES["cache+bw"],
+            "cache+bw+pref": FIG5_FAMILIES["cache+bw+pref"]}
+    jx = search_static(wls, families=fams, k=6, multi_objective=True)
+    ref = search_static(wls, families=fams, k=6, backend="numpy",
+                        multi_objective=True)
+    for fam in jx.family_names:
+        np.testing.assert_array_equal(jx.topk_index[fam],
+                                      ref.topk_index[fam], err_msg=fam)
+        np.testing.assert_allclose(jx.topk_ws[fam], ref.topk_ws[fam],
+                                   rtol=1e-12, err_msg=fam)
+        np.testing.assert_allclose(jx.topk_fairness[fam],
+                                   ref.topk_fairness[fam], rtol=1e-12,
+                                   err_msg=fam)
+
+
+def test_knee_index_picks_balanced_tradeoff():
+    """Synthetic 3-member front: the knee is the middle member (closest
+    to utopia after min-max normalization), not either extreme; a
+    scalar result refuses the query."""
+    from repro.sim.static_search import StaticSearchResult
+
+    res = StaticSearchResult(
+        family_names=["f"], workloads=[["a", "b"]], grids={},
+        topk_ws={"f": np.array([[3.0, 2.0, 1.0], [5.0, -np.inf, -np.inf]])},
+        topk_index={"f": np.array([[5, 7, 9], [2, -1, -1]])},
+        baseline_ipc=np.ones((2, 2)), backend="numpy", k=3,
+        topk_fairness={"f": np.array([[0.1, 0.9, 1.0],
+                                      [0.4, -np.inf, -np.inf]])},
+        multi_objective=True)
+    # normalized: (1,0), (.5,.889), (0,1) -> middle is nearest to (1,1);
+    # the single-member front degenerates to its only (best-ws) member.
+    np.testing.assert_array_equal(res.knee_index("f"), [7, 2])
+
+    scalar = search_static(random_workloads(2, 2, seed=0), k=2,
+                           backend="numpy")
+    with pytest.raises(ValueError, match="multi_objective"):
+        scalar.knee_index("cache+bw+pref")
+
+
+def test_registry_families_expose_policy_grids():
+    """Every registered manager family converts to a FamilySpec; the new
+    policy families carry their documented knobs (auction/qos search
+    cache+bw, bank bw searches bandwidth over 4 banks)."""
+    fams = registry_families()
+    from repro.sim import policies
+    assert set(fams) == set(policies.manager_names())
+    assert fams["auction"].manage_cache and fams["auction"].manage_bw
+    assert fams["qos"].manage_cache and fams["qos"].manage_bw
+    assert not fams["bank bw"].manage_cache and fams["bank bw"].manage_bw
+    assert fams["bank bw"].bandwidth_banks == 4
+    sub = registry_families(["CBP", "bank bw"])
+    assert list(sub) == ["CBP", "bank bw"]
+
+
+def test_banked_family_search_end_to_end():
+    """The bank-aware bandwidth model threads through the search: numpy
+    and brute-force direct evaluation agree exactly, and banking shifts
+    the scores away from the flat (1-bank) model."""
+    from repro.sim import memsys
+
+    wls = random_workloads(2, 2, seed=9)
+    fams = registry_families(["bank bw"])
+    res = search_static(wls, families=fams, k=2, backend="numpy")
+    flat = search_static(
+        wls, families={"bank bw": FamilySpec(manage_bw=True)}, k=2,
+        backend="numpy")
+    grid = res.grids["bank bw"]
+    for wi in range(2):
+        from repro.sim.apps import stack
+        ss = memsys.evaluate(
+            stack(wls[wi]), grid.cache, grid.bandwidth, grid.prefetch,
+            total_cache_units=grid.total_cache_units,
+            total_bandwidth_gbps=grid.total_bandwidth_gbps,
+            bandwidth_banks=4, iters=40)
+        ws = np.mean(ss.ipc / res.baseline_ipc[wi], axis=-1)
+        best = np.argsort(-ws, kind="stable")[:2]
+        np.testing.assert_array_equal(res.topk_index["bank bw"][wi], best)
+        np.testing.assert_allclose(res.topk_ws["bank bw"][wi], ws[best],
+                                   rtol=0)
+    assert not np.allclose(res.topk_ws["bank bw"], flat.topk_ws["bank bw"])
 
 
 # --------------------------------------------------------------------- #

@@ -30,6 +30,7 @@ from repro.sim.stream_sweep import (
     NumericalDivergenceError,
     RetryPolicy,
     StreamAbortedError,
+    StreamAggregates,
     StreamConfig,
     run_stream,
 )
@@ -121,6 +122,74 @@ def test_zipf_popularity_concentrates_catalog():
     # heavy tail: a handful of catalog templates dominate the stream
     _, counts = np.unique(flat, return_counts=True)
     assert counts.max() > 4 * np.median(counts)
+
+
+# ---------------------- aggregate fold closed-form ------------------ #
+
+
+def test_aggregates_fold_hand_computed_chunk():
+    """One hand-computed chunk (K=2 managers, M=2 mixes, n=3 apps) pins
+    the histogram fold — including the overflow bucket — and the min-
+    fairness fold against closed-form values.
+
+    hist_bins=5, hist_max=4.0 -> bin_width = 4.0 / (5 - 1) = 1.0, and
+    bin 4 is the overflow bucket for any slowdown >= 4.0."""
+    agg = StreamAggregates(n_managers=2, hist_bins=5, hist_max_slowdown=4.0)
+    assert agg.bin_width == 1.0
+    ws = np.array([[1.2, 1.5], [1.0, 2.0]])
+    slowdown = np.array([
+        [[0.5, 1.5, 2.5], [3.5, 10.0, 0.2]],   # bins 0,1,2 | 3, OVF, 0
+        [[1.0, 1.0, 1.0], [1.0, 1.0, 9.0]],    # bins 1,1,1 | 1, 1, OVF
+    ])
+    fairness = np.array([[0.8, 0.6], [0.9, 0.7]])
+    agg.fold(ws, slowdown, fairness)
+
+    np.testing.assert_array_equal(agg.slowdown_hist,
+                                  [[2, 1, 1, 1, 1], [0, 5, 0, 0, 1]])
+    np.testing.assert_array_equal(agg.mix_count, [2, 2])
+    np.testing.assert_array_equal(agg.max_slowdown, [10.0, 9.0])
+    np.testing.assert_array_equal(agg.min_fairness, [0.6, 0.7])
+    np.testing.assert_allclose(
+        agg.geomean_ws(), [np.sqrt(1.2 * 1.5), np.sqrt(2.0)], rtol=1e-15)
+
+    # Sketch percentiles, closed form (target = q * total, total = 6):
+    # m0 cum=[2,3,4,5,6]: p50 target 3.0 lands at bin 1 filled -> 2.0;
+    # m1 cum=[0,5,5,5,6]: p50 target 3.0 is 3/5 through bin 1 -> 1.6.
+    np.testing.assert_allclose(agg.slowdown_percentile(0.5), [2.0, 1.6])
+    # p90 target 5.4: both 0.4 into the overflow bin -> (4 + 0.4) * 1.0;
+    # overflow readings sit above hist_max by design (sketch saturation).
+    np.testing.assert_allclose(agg.slowdown_percentile(0.9), [4.4, 4.4])
+    np.testing.assert_allclose(agg.slowdown_percentile(0.99), [4.94, 4.94])
+
+
+def test_aggregates_fold_accumulates_across_chunks():
+    """Second fold: histograms add, min-fairness takes the running min,
+    max-slowdown the running max — and the percentile tracks the merged
+    histogram exactly."""
+    agg = StreamAggregates(n_managers=2, hist_bins=5, hist_max_slowdown=4.0)
+    agg.fold(np.array([[1.2, 1.5], [1.0, 2.0]]),
+             np.array([[[0.5, 1.5, 2.5], [3.5, 10.0, 0.2]],
+                       [[1.0, 1.0, 1.0], [1.0, 1.0, 9.0]]]),
+             np.array([[0.8, 0.6], [0.9, 0.7]]))
+    agg.fold(np.ones((2, 2)),
+             np.full((2, 2, 3), 0.1),                # all bin 0
+             np.array([[0.9, 0.95], [0.5, 0.8]]))
+
+    np.testing.assert_array_equal(agg.slowdown_hist,
+                                  [[8, 1, 1, 1, 1], [6, 5, 0, 0, 1]])
+    np.testing.assert_array_equal(agg.mix_count, [4, 4])
+    np.testing.assert_array_equal(agg.min_fairness, [0.6, 0.5])
+    np.testing.assert_array_equal(agg.max_slowdown, [10.0, 9.0])
+    np.testing.assert_allclose(agg.geomean_ws(),
+                               [1.8 ** 0.25, 2.0 ** 0.25], rtol=1e-15)
+    # p50 target 6 of 12: m0 is 6/8 through bin 0 -> 0.75; m1's cum hits
+    # exactly 6 at bin 0's edge -> 1.0 (left searchsorted keeps bin 0).
+    np.testing.assert_allclose(agg.slowdown_percentile(0.5), [0.75, 1.0])
+
+
+def test_aggregates_empty_percentile_is_nan():
+    agg = StreamAggregates(n_managers=1, hist_bins=4, hist_max_slowdown=2.0)
+    assert np.isnan(agg.slowdown_percentile(0.5)).all()
 
 
 # -------------------------- fault plan unit ------------------------- #

@@ -270,7 +270,7 @@ import jax
 from repro import distributed
 from repro.sim import MANAGER_NAMES, WORKLOADS, run_sweep
 assert jax.device_count() == 8, jax.device_count()
-# 11 managers x 2 mixes on 8 forced devices factor into a genuine 2-D
+# 14 managers x 2 mixes on 8 forced devices factor into a genuine 2-D
 # (manager, mix) mesh — the manager axis is really being split here.
 assert distributed.grid_shard_counts(len(MANAGER_NAMES), 2) == (4, 2)
 res = run_sweep([WORKLOADS["w1"], WORKLOADS["w2"]], total_ms=20.0)
@@ -297,8 +297,9 @@ def _forced_device_env(n: int = 8) -> dict:
 def test_manager_mix_grid_shards_across_forced_host_devices():
     """The same stacked sweep on 8 forced host devices — the (manager,
     mix) grid sharded over a (4, 2) mesh via repro.distributed.shard_grid,
-    managers padded 11 -> 12 — is BIT-IDENTICAL to the single-device run
-    for every Table-3 manager."""
+    managers padded 14 -> 16 — is BIT-IDENTICAL to the single-device run
+    for every registered manager, including the auction / qos / bank bw
+    policy families."""
     proc = subprocess.run(
         [sys.executable, "-c", _SHARD_SCRIPT], env=_forced_device_env(),
         capture_output=True, text=True, timeout=540)

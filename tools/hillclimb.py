@@ -9,6 +9,13 @@ finer lattice, seeded from the batched device search's top-k
 (``repro.sim.static_search.search_static(k=...)``):
 
   PYTHONPATH=src python tools/hillclimb.py --fig5-seed
+
+With ``--multi-objective`` the search folds the (weighted speedup,
+min-fairness) Pareto front instead and the climb seeds from the front's
+KNEE point first (``StaticSearchResult.knee_index`` — the balanced
+trade-off member), then the remaining front members:
+
+  PYTHONPATH=src python tools/hillclimb.py --fig5-seed --multi-objective
 """
 import argparse
 import dataclasses
@@ -165,7 +172,8 @@ def run_variant(cell: str, variant: str, force: bool = False) -> dict:
 
 
 def fig5_seeded_hillclimb(n_workloads: int = 4, k: int = 4,
-                          force: bool = False) -> dict:
+                          force: bool = False,
+                          multi_objective: bool = False) -> dict:
     """Refine Fig. 5 static winners beyond the coarse paper grid.
 
     The batched device search (``repro.sim.static_search``) solves the
@@ -176,6 +184,11 @@ def fig5_seeded_hillclimb(n_workloads: int = 4, k: int = 4,
     budget boundary, where only transfers stay feasible.  Multiple seeds
     matter: near-tied coarse optima routinely climb to different local
     maxima.
+
+    With ``multi_objective`` the seeds come from the Pareto front over
+    (weighted speedup, min-fairness), knee point first — climbing from
+    the balanced trade-off member rather than the raw ws maximizer —
+    then the remaining front members.
     """
     import numpy as np
 
@@ -185,17 +198,21 @@ def fig5_seeded_hillclimb(n_workloads: int = 4, k: int = 4,
     from repro.sim.workloads import random_workloads
 
     OUT.mkdir(parents=True, exist_ok=True)
+    seed_mode = "pareto_knee" if multi_objective else "scalar_topk"
     path = OUT / "fig5_hillclimb.json"
     if path.exists() and not force:
         cached = json.loads(path.read_text())
         # The cache is only valid for the parameters it recorded.
         if (cached.get("n_workloads") == n_workloads
-                and cached.get("k_seeds") == k):
+                and cached.get("k_seeds") == k
+                and cached.get("seed_mode", "scalar_topk") == seed_mode):
             return cached
 
     fam = "cache+bw+pref"
     wls = random_workloads(n_workloads, 4, seed=7)
-    res = search_static(wls, families={fam: FIG5_FAMILIES[fam]}, k=k)
+    res = search_static(wls, families={fam: FIG5_FAMILIES[fam]}, k=k,
+                        multi_objective=multi_objective)
+    knee = res.knee_index(fam) if multi_objective else None
     grid = res.grids[fam]
     total_units = grid.total_cache_units
     total_bw = grid.total_bandwidth_gbps
@@ -212,11 +229,15 @@ def fig5_seeded_hillclimb(n_workloads: int = 4, k: int = 4,
                 total_bandwidth_gbps=total_bw, iters=40)
             return float(np.mean(ss.ipc / base))
 
+        seed_ids = [int(i) for i in res.topk_index[fam][wi] if i >= 0]
+        if knee is not None:
+            # Knee first: the balanced-trade-off front member leads the
+            # climb; the rest of the front follows as alternate seeds.
+            kn = int(knee[wi])
+            seed_ids = [kn] + [i for i in seed_ids if i != kn]
+
         best_ws, best_cfg = -np.inf, None
-        for si in range(k):
-            idx = int(res.topk_index[fam][wi, si])
-            if idx < 0:
-                continue
+        for idx in seed_ids:
             c = grid.cache[idx].copy()
             b = grid.bandwidth[idx].copy()
             p = grid.prefetch[idx].copy()
@@ -268,6 +289,7 @@ def fig5_seeded_hillclimb(n_workloads: int = 4, k: int = 4,
         })
     rec = {
         "family": fam, "n_workloads": n_workloads, "k_seeds": k,
+        "seed_mode": seed_mode,
         "mean_refine_gain": round(
             float(np.mean([r["refine_gain"] for r in rows])), 4),
         "rows": rows,
@@ -287,14 +309,19 @@ def main() -> None:
                          "search's top-k seeds")
     ap.add_argument("--workloads", type=int, default=4)
     ap.add_argument("--seeds", type=int, default=4)
+    ap.add_argument("--multi-objective", action="store_true",
+                    help="seed from the (ws, min-fairness) Pareto front, "
+                         "knee point first")
     args = ap.parse_args()
 
     if args.fig5_seed:
         rec = fig5_seeded_hillclimb(args.workloads, args.seeds,
-                                    force=args.force)
+                                    force=args.force,
+                                    multi_objective=args.multi_objective)
         print(f"fig5_hillclimb: mean refine gain {rec['mean_refine_gain']}"
               f" over {rec['n_workloads']} workloads "
-              f"({rec['k_seeds']} seeds each)", flush=True)
+              f"({rec['k_seeds']} seeds each, {rec['seed_mode']})",
+              flush=True)
         for r in rec["rows"]:
             print(f"  {','.join(r['workload'])}: grid {r['grid_best_ws']}"
                   f" -> refined {r['refined_ws']} (+{r['refine_gain']})",
